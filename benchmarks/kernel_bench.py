@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: wall time of the XLA fallback path on CPU,
+interpret-mode overhead, and the TPU roofline estimate of the stsp_spmv
+kernel (bytes-bound at batch-1, DESIGN.md §2 'Batch-1 vs batched')."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply_cbtd, blen_for, cbcsc_encode
+from repro.kernels import ops
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_kernels(quick: bool = True) -> Dict:
+    rows = {}
+    cases = [(1024, 1147, 64, 0.9375, 128)]
+    if not quick:
+        cases += [(2048, 4096, 64, 0.9375, 256), (512, 512, 32, 0.9, 64)]
+    for h4, q, m, gamma, k in cases:
+        w = apply_cbtd(jax.random.normal(jax.random.key(0), (h4 * 4, q)) + 0.01,
+                       gamma, m, 1.0)
+        enc = cbcsc_encode(w, m, blen=blen_for(h4 * 4, m, gamma))
+        idx = jnp.arange(k, dtype=jnp.int32)
+        vals = jax.random.normal(jax.random.key(1), (k,))
+
+        t_xla = _time(
+            lambda v, li, i, dv: ops.stsp_spmv(v, li, i, dv, s=enc.s),
+            enc.val, enc.lidx, idx, vals,
+        )
+        t_dense = _time(lambda ww, dv: ww @ dv, w,
+                        jnp.zeros((q,)).at[idx].set(vals))
+        # TPU estimate: the op is HBM-bound at batch-1; bytes = CBCSC slabs
+        # of K active columns (int8 val + int8 idx) + output
+        sparse_bytes = k * enc.m * enc.blen * 2 + h4 * 4 * 4
+        dense_bytes = h4 * 4 * q * 2  # bf16 dense fetch of the whole matrix
+        rows[f"stsp_h{h4*4}_q{q}_k{k}"] = {
+            "xla_us_cpu": round(t_xla, 1),
+            "dense_matvec_us_cpu": round(t_dense, 1),
+            "tpu_est_sparse_us": round(sparse_bytes / HBM_BW * 1e6, 3),
+            "tpu_est_dense_us": round(dense_bytes / HBM_BW * 1e6, 3),
+            "tpu_est_traffic_reduction": round(dense_bytes / sparse_bytes, 1),
+        }
+
+    # delta_encode
+    x = jax.random.normal(jax.random.key(2), (4096,))
+    xh = x + jax.random.normal(jax.random.key(3), (4096,)) * 0.1
+    rows["delta_encode_4096"] = {
+        "xla_us_cpu": round(_time(
+            lambda a, b: ops.delta_encode(a, b, 0.1), x, xh), 1),
+        "pallas_interpret_us_cpu": round(_time(
+            lambda a, b: ops.delta_encode(a, b, 0.1, use_pallas=True), x, xh), 1),
+    }
+    return rows

@@ -1,0 +1,227 @@
+"""One benchmark per paper table/figure (Sec. VI/VII).
+
+Accuracy-bearing benches train small same-family networks on the
+synthetic speech task (TIMIT is offline-unavailable; DESIGN.md §7), so
+absolute PERs differ from the paper but every *relative* claim is
+checked: the sparsity->accuracy trade-off shape, temporal sparsity vs
+theta, balance ratio vs (theta, N), the op-saving ladder, and the
+modelled hardware numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance_ratio, op_saving, tree_weight_sparsity
+from repro.data.speech import SpeechConfig, SpeechDataset
+from repro.hwsim import memory as hwmem
+from repro.hwsim import spartus_model as hw
+from repro.models import lstm_am
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import (
+    TrainConfig, evaluate_per, measure_delta_stats, train,
+)
+
+Q = dict()  # quick-mode cache of trained models
+
+
+def _base_cfg(gamma=0.94, m=16, hidden=64, frames=64):
+    # 10-phoneme task calibrated to be learnable in ~4 epochs on CPU
+    # (PER < 0.3), so the accuracy columns carry signal
+    return TrainConfig(
+        model=lstm_am.LSTMAMConfig(input_dim=123, hidden_dim=hidden,
+                                   n_layers=2, n_classes=11),
+        data=SpeechConfig(max_frames=frames, n_classes=10, avg_segment=12,
+                          tau=0.9),
+        opt=AdamWConfig(lr=5e-3),
+        batch_size=16,
+        steps_per_epoch=60,
+        cbtd_gamma=gamma,
+        cbtd_m=m,
+        cbtd_delta_alpha=0.5,
+    )
+
+
+def _train_pair(gamma: float, theta: float, epochs=(4, 2)):
+    """pretrain (LSTM+CBTD) then retrain (DeltaLSTM) — cached."""
+    key = (gamma, theta)
+    if key in Q:
+        return Q[key]
+    cfg = _base_cfg(gamma=gamma)
+    pre = train(cfg, epochs=epochs[0])
+    retrain_cfg = dataclasses.replace(
+        cfg,
+        model=dataclasses.replace(cfg.model, delta=True, theta=theta),
+        cbtd_delta_alpha=1.0,
+    )
+    post = train(retrain_cfg, epochs=epochs[1], params=pre.params)
+    Q[key] = (pre, post, retrain_cfg)
+    return Q[key]
+
+
+def bench_table2_accuracy(quick: bool = True) -> Dict:
+    """Table II: accuracy/sparsity/op-saving ladder (relative PERs)."""
+    gammas = [0.0, 0.75, 0.94] if quick else [0.0, 0.5, 0.75, 0.9, 0.94, 0.97]
+    rows = {}
+    ds = SpeechDataset(_base_cfg().data, 16)
+    for gamma in gammas:
+        cfg = _base_cfg(gamma=gamma if gamma > 0 else None)
+        res = train(cfg, epochs=4)
+        per = evaluate_per(res.params, cfg, ds, n_batches=2)
+        ws = tree_weight_sparsity(
+            {"x": [l["w_x"] for l in res.params["lstm"]],
+             "h": [l["w_h"] for l in res.params["lstm"]]}
+        )
+        rows[f"gamma={gamma}"] = {
+            "per": round(per, 4), "weight_sparsity": round(ws, 4),
+            "op_saving": round(op_saving(ws, 0.0), 1),
+            "final_loss": round(res.final_loss, 3),
+        }
+    # spatio-temporal row (the paper's headline config, scaled down)
+    pre, post, rcfg = _train_pair(0.94, 0.2)
+    stats = measure_delta_stats(post.params, rcfg, SpeechDataset(rcfg.data, 8))
+    ts = np.mean([stats[f"layer{i}"]["temporal_sparsity"] for i in range(2)])
+    ws = tree_weight_sparsity(
+        {"x": [l["w_x"] for l in post.params["lstm"]],
+         "h": [l["w_h"] for l in post.params["lstm"]]}
+    )
+    per = evaluate_per(post.params, rcfg, ds, n_batches=2)
+    rows["spatio_temporal"] = {
+        "per": round(per, 4), "weight_sparsity": round(float(ws), 4),
+        "temporal_sparsity": round(float(ts), 4),
+        "op_saving": round(op_saving(ws, ts), 1),
+    }
+    return rows
+
+
+def bench_fig13_sparsity_vs_theta(quick: bool = True) -> Dict:
+    """Fig. 13a/b: temporal sparsity of dx/dh and PER vs theta."""
+    thetas = [0.05, 0.2, 0.5] if quick else [0.0, 0.05, 0.1, 0.2, 0.3, 0.5]
+    rows = {}
+    ds = SpeechDataset(_base_cfg().data, 16)
+    for theta in thetas:
+        pre, post, rcfg = _train_pair(0.94, theta)
+        stats = measure_delta_stats(post.params, rcfg,
+                                    SpeechDataset(rcfg.data, 8))
+        per = evaluate_per(post.params, rcfg, ds, n_batches=2)
+        rows[f"theta={theta}"] = {
+            "ts_dx_l0": round(stats["layer0"]["temporal_sparsity_dx"], 4),
+            "ts_dh_l0": round(stats["layer0"]["temporal_sparsity_dh"], 4),
+            "ts_dh_l1": round(stats["layer1"]["temporal_sparsity_dh"], 4),
+            "per": round(per, 4),
+        }
+    # monotonicity check (the paper's qualitative claim)
+    ts_list = [rows[f"theta={t}"]["ts_dh_l1"] for t in thetas]
+    rows["_monotone"] = bool(all(a <= b + 1e-6 for a, b in zip(ts_list, ts_list[1:])))
+    return rows
+
+
+def bench_fig12_balance_ratio(quick: bool = True) -> Dict:
+    """Fig. 12: BR vs theta and #MAC arrays, from measured delta masks."""
+    thetas = [0.05, 0.2, 0.5] if quick else [0.05, 0.1, 0.2, 0.3, 0.5]
+    ns = [2, 4, 8, 16]
+    rows = {}
+    for theta in thetas:
+        pre, post, rcfg = _train_pair(0.94, theta)
+        stats = measure_delta_stats(post.params, rcfg,
+                                    SpeechDataset(rcfg.data, 8))
+        masks = jnp.concatenate(
+            [stats["layer1"]["dx_masks"], stats["layer1"]["dh_masks"]], axis=-1
+        )
+        rows[f"theta={theta}"] = {
+            f"N={n}": round(float(balance_ratio(masks, n)), 4) for n in ns
+        }
+    # BR decreases with N (paper observation)
+    for theta in thetas:
+        r = rows[f"theta={theta}"]
+        rows.setdefault("_br_decreasing_in_N", True)
+        rows["_br_decreasing_in_N"] &= (r["N=2"] >= r["N=16"] - 1e-6)
+    return rows
+
+
+def bench_table4_hw_ladder(quick: bool = True) -> Dict:
+    """Table IV + Fig. 13c: the optimization ladder on modelled hardware,
+    driven by OUR measured temporal sparsity + balance ratio."""
+    pre, post, rcfg = _train_pair(0.94, 0.2)
+    stats = measure_delta_stats(post.params, rcfg, SpeechDataset(rcfg.data, 8))
+    masks = jnp.concatenate(
+        [stats["layer1"]["dx_masks"], stats["layer1"]["dh_masks"]], axis=-1
+    )
+    ts = float(1.0 - jnp.mean(masks.astype(jnp.float32)))
+    br = float(balance_ratio(masks, hw.SPARTUS.n_arrays))
+
+    ladder = hw.table4_ladder(ts_by_theta={0.2: ts}, br_by_theta={0.2: br})
+    out = {k: {"latency_us": round(v.latency_us, 2),
+               "eff_gops": round(v.batch1_throughput_gops, 1)}
+           for k, v in ladder.items()}
+    out["measured_ts"] = round(ts, 4)
+    out["measured_br_n8"] = round(br, 4)
+    out["paper_ladder"] = {k: {"latency_us": round(v.latency_us, 2),
+                               "eff_gops": round(v.batch1_throughput_gops, 1)}
+                           for k, v in hw.table4_ladder().items()}
+    return out
+
+
+def bench_table5_comparison(quick: bool = True) -> Dict:
+    """Tables V/VI: Spartus + Edge-Spartus vs prior accelerators."""
+    ladder = hw.table4_ladder()
+    spartus = hw.comparison_table(ladder["delta_0.3"],
+                                  hw.SPARTUS_WALL_POWER_W)
+    edge = hw.evaluate(hw.EDGE_SPARTUS, hw.TEST_LAYER, 0.9375,
+                       temporal_sparsity=0.8256, balance_ratio=1.0)
+    return {
+        "spartus_vs_prior": {k: {kk: round(vv, 2) for kk, vv in v.items()}
+                             for k, v in spartus.items()},
+        "edge_spartus": {"latency_us": round(edge.latency_us, 1),
+                         "eff_gops": round(edge.batch1_throughput_gops, 1)},
+    }
+
+
+def bench_table7_dram_energy(quick: bool = True) -> Dict:
+    """Table VII / Fig. 14: DRAM access energy per inference frame."""
+    tbl = hwmem.fig14_table(hw.TEST_LAYER.dense_macs, gamma=0.9375,
+                            temporal_sparsity=0.8256)
+    return {k: ({kk: round(vv, 3) for kk, vv in v.items()}
+                if isinstance(v, dict) else v)
+            for k, v in tbl.items()}
+
+
+def bench_deltagru_vs_deltalstm(quick: bool = True) -> Dict:
+    """The paper's prior-art algorithm comparison (Sec. VII-A, DeltaRNN):
+    DeltaGRU vs DeltaLSTM on the same smooth-signal task — temporal
+    sparsity at matched thresholds and the modelled hardware speedup each
+    buys.  (The paper's claim: the DN algorithm extends to LSTM with the
+    same sparsity behaviour; Table V then compares the accelerators.)"""
+    import jax
+    from repro.core import (
+        delta_gru_layer, delta_lstm_layer, init_gru_params, init_lstm_params,
+        summarize_delta_aux,
+    )
+    from repro.data.speech import SpeechConfig, class_means, synth_utterance
+
+    d, h = 123, 64
+    scfg = SpeechConfig(max_frames=96, tau=0.9)
+    feats, *_ = synth_utterance(jax.random.key(0), scfg, class_means(scfg))
+    lstm_p = init_lstm_params(jax.random.key(1), d, h)
+    gru_p = init_gru_params(jax.random.key(2), d, h)
+
+    rows = {}
+    for theta in ([0.1, 0.3] if quick else [0.05, 0.1, 0.2, 0.3, 0.5]):
+        _, _, aux_l = delta_lstm_layer(lstm_p, feats, theta)
+        _, _, aux_g = delta_gru_layer(gru_p, feats, theta)
+        ts_l = summarize_delta_aux(aux_l, d, h)["temporal_sparsity"]
+        ts_g = summarize_delta_aux(aux_g, d, h)["temporal_sparsity"]
+        rep_l = hw.evaluate(hw.SPARTUS, hw.TEST_LAYER, 0.9375, ts_l, 0.75)
+        rep_g = hw.evaluate(hw.SPARTUS, hw.TEST_LAYER, 0.9375, ts_g, 0.75)
+        rows[f"theta={theta}"] = {
+            "ts_deltalstm": round(float(ts_l), 4),
+            "ts_deltagru": round(float(ts_g), 4),
+            "hw_eff_gops_deltalstm": round(rep_l.batch1_throughput_gops, 1),
+            "hw_eff_gops_deltagru": round(rep_g.batch1_throughput_gops, 1),
+        }
+    return rows

@@ -1,0 +1,67 @@
+"""Quickstart: the paper's full pipeline in miniature, on CPU, in ~2 min.
+
+1. pretrain a small LSTM acoustic model with CBTD structured pruning,
+2. retrain it as a DeltaLSTM (temporal sparsity),
+3. export to CBCSC and stream an utterance through the Spartus engine,
+4. report the measured spatio-temporal sparsity, op savings, and the
+   modelled accelerator speedup (Table IV style).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro.core import op_saving, tree_weight_sparsity
+from repro.data.speech import SpeechConfig, SpeechDataset
+from repro.hwsim import spartus_model as hw
+from repro.models import lstm_am
+from repro.serving.engine import EngineConfig, SpartusEngine
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import TrainConfig, evaluate_per, pretrain_retrain
+
+GAMMA, THETA, M = 0.75, 0.2, 8
+
+cfg = TrainConfig(
+    model=lstm_am.LSTMAMConfig(input_dim=123, hidden_dim=64, n_layers=2,
+                               n_classes=11),
+    data=SpeechConfig(max_frames=64, n_classes=10, avg_segment=12, tau=0.9),
+    opt=AdamWConfig(lr=5e-3),
+    batch_size=16,
+    steps_per_epoch=60,
+    cbtd_gamma=GAMMA,
+    cbtd_m=M,
+    cbtd_delta_alpha=0.5,
+)
+
+print(f"== 1/2: pretrain LSTM+CBTD (gamma={GAMMA}), retrain DeltaLSTM "
+      f"(theta={THETA}) ==")
+pre, post, retrain_cfg = pretrain_retrain(cfg, pretrain_epochs=3,
+                                          retrain_epochs=2, theta=THETA)
+ws = tree_weight_sparsity({"x": [l["w_x"] for l in post.params["lstm"]],
+                           "h": [l["w_h"] for l in post.params["lstm"]]})
+per = evaluate_per(post.params, retrain_cfg, SpeechDataset(cfg.data, 16))
+print(f"   pretrain loss {pre.final_loss:.3f} -> retrain loss "
+      f"{post.final_loss:.3f}; weight sparsity {ws:.1%}; PER {per:.3f}")
+
+print("== 3: CBCSC export + Spartus streaming engine ==")
+engine = SpartusEngine(post.params, retrain_cfg.model,
+                       EngineConfig(theta=THETA, gamma=GAMMA, m=M))
+feats, *_ = next(SpeechDataset(cfg.data, 1))
+logits = engine.run_utterance(feats[0])
+sp = engine.measured_sparsity()
+print(f"   streamed {logits.shape[0]} frames; temporal sparsity "
+      f"{sp['temporal_sparsity']:.1%}; capacity overflow "
+      f"{sp['capacity_overflow_rate']:.1%}")
+
+print("== 4: op savings + modelled hardware (Table IV style) ==")
+saving = op_saving(ws, sp["temporal_sparsity"])
+print(f"   arithmetic op saving: {saving:.1f}x "
+      f"(paper at gamma=0.94/theta=0.3: 170x)")
+dense = hw.dense_baseline(hw.SPARTUS, hw.TEST_LAYER)
+fast = hw.evaluate(hw.SPARTUS, hw.TEST_LAYER, 0.9375,
+                   sp["temporal_sparsity"], 0.75)
+print(f"   modelled Spartus: dense {dense.latency_us:.1f} us -> "
+      f"spatio-temporal {fast.latency_us:.2f} us "
+      f"({dense.latency_us / fast.latency_us:.0f}x speedup, "
+      f"{fast.batch1_throughput_gops/1e3:.2f} TOp/s effective)")

@@ -1,0 +1,118 @@
+"""Column-Balanced Compressed Sparse Column (CBCSC) — Alg. 3 / Fig. 3.
+
+Encodes a CBTD-pruned matrix ``W [H, Q]`` into:
+  * ``val  [Q, M, BLEN]`` — nonzero values, PE-aligned (PE i owns rows
+    ``r % M == i``; local index ``k = r // M``),
+  * ``lidx [Q, M, BLEN]`` — local index k of each value inside its
+    subcolumn (0 <= k < S, S = H/M),
+  * ``blen`` — scalar, nonzeros per subcolumn: ``ceil(H/M * (1-gamma))``.
+
+Because CBTD guarantees the same number of nonzeros in every subcolumn,
+``val`` needs no column pointers and no per-PE arbitration — every PE
+reads exactly BLEN (value, index) pairs per column.  ``to_stream`` emits
+the exact for-j/for-i/for-k element order of Alg. 3 (used by tests).
+
+The same arrays are the storage format of the TPU serving kernel
+(``kernels/stsp_spmv.py``): the on-the-fly decompression uses an S-wide
+one-hot contraction per subcolumn, which is VPU-cheap for small S (the
+sublane-aligned analogue of the per-PE LUTRAM scatter; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CBCSC:
+    val: jax.Array    # [Q, M, BLEN]
+    lidx: jax.Array   # [Q, M, BLEN] int32
+    valid: jax.Array  # [Q, M, BLEN] bool (False = padding)
+    h: int            # original column height
+    m: int            # number of PEs
+    blen: int         # burst length
+
+    @property
+    def q(self) -> int:
+        return self.val.shape[0]
+
+    @property
+    def s(self) -> int:
+        """Subcolumn length H/M."""
+        return self.h // self.m
+
+    def global_row_idx(self) -> jax.Array:
+        """[Q, M, BLEN] row index in the dense matrix: r = lidx*M + i."""
+        i = jnp.arange(self.m, dtype=jnp.int32)[None, :, None]
+        return self.lidx * self.m + i
+
+    def to_stream(self) -> Tuple[jax.Array, jax.Array]:
+        """Alg. 3 element order (for j / for i / for k): 1-D VAL, LIDX."""
+        return self.val.reshape(-1), self.lidx.reshape(-1)
+
+    def nbytes(self, val_bits: int = 8, idx_bits: int = 8) -> int:
+        """Storage footprint in bytes (paper: INT8 VAL + 8/10-bit LIDX)."""
+        n = int(np.prod(self.val.shape))
+        return (n * val_bits + n * idx_bits + 7) // 8
+
+
+def blen_for(h: int, m: int, gamma: float) -> int:
+    """Alg. 3: BLEN = ceil(H/M * (1 - gamma))."""
+    return math.ceil((h // m) * (1.0 - gamma))
+
+
+def cbcsc_encode(w: jax.Array, m: int, blen: int | None = None) -> CBCSC:
+    """Encode a (column-balanced) sparse matrix.  If any subcolumn has more
+    than ``blen`` nonzeros a ValueError is raised (the matrix was not
+    CBTD-pruned to the promised gamma).  ``blen=None`` uses the max
+    subcolumn occupancy (always lossless)."""
+    h, q = w.shape
+    if h % m:
+        raise ValueError(f"H={h} not divisible by M={m}")
+    s = h // m
+    # [M, S, Q] subcolumn view (interleaved rows), then [Q, M, S]:
+    sub = w.reshape(s, m, q).transpose(2, 1, 0)
+    nz = sub != 0
+    counts = jnp.sum(nz, axis=-1)
+    max_occ = int(jax.device_get(jnp.max(counts)))
+    if blen is None:
+        blen = max(max_occ, 1)
+    elif max_occ > blen:
+        raise ValueError(
+            f"subcolumn occupancy {max_occ} exceeds BLEN={blen}; "
+            "matrix is not column-balanced to the promised sparsity"
+        )
+    # stable sort brings nonzero positions first, preserving k order:
+    order = jnp.argsort(~nz, axis=-1, stable=True)[..., :blen]
+    val = jnp.take_along_axis(sub, order, axis=-1)
+    valid = jnp.take_along_axis(nz, order, axis=-1)
+    val = val * valid.astype(val.dtype)
+    lidx = jnp.where(valid, order, 0).astype(jnp.int32)
+    return CBCSC(val=val, lidx=lidx, valid=valid, h=h, m=m, blen=blen)
+
+
+def cbcsc_decode(enc: CBCSC, dtype=None) -> jax.Array:
+    """Exact inverse of cbcsc_encode (up to the original zeros)."""
+    dtype = dtype or enc.val.dtype
+    q, m, blen = enc.val.shape
+    s = enc.s
+    # scatter val into [Q, M, S] via one-hot over the local index:
+    onehot = enc.lidx[..., None] == jnp.arange(s, dtype=jnp.int32)
+    onehot = onehot & enc.valid[..., None]
+    sub = jnp.sum(enc.val[..., None] * onehot.astype(dtype), axis=2)  # [Q, M, S]
+    return sub.transpose(2, 1, 0).reshape(enc.h, q)
+
+
+def cbcsc_spmv_reference(enc: CBCSC, ds: jax.Array) -> jax.Array:
+    """y = W @ ds computed straight from the CBCSC arrays (no decode):
+    the mathematical spec of what the Spartus MAC arrays do.  ds: [Q]."""
+    contrib = enc.val * ds[:, None, None]                  # [Q, M, BLEN]
+    s = enc.s
+    onehot = (enc.lidx[..., None] == jnp.arange(s, dtype=jnp.int32)) & enc.valid[..., None]
+    sub = jnp.einsum("qmb,qmbs->ms", contrib, onehot.astype(contrib.dtype))
+    return sub.transpose(1, 0).reshape(enc.h)              # [H]

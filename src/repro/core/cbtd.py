@@ -1,0 +1,215 @@
+"""Column-Balanced Targeted Dropout (CBTD) — Alg. 1 & 2 of the paper.
+
+A weight matrix ``W [H, Q]`` (H = output rows = "column height", Q = input
+columns) is viewed as Q columns; each column is split into M *subcolumns*
+by interleaving rows across the M PEs (row r -> PE ``r % M``, local index
+``r // M`` — Fig. 2/3 of the paper).  In each subcolumn, the smallest
+``floor(H/M * gamma)`` elements by magnitude are dropped, each with
+probability ``alpha``.  At ``alpha=1`` every subcolumn of every column has
+*exactly* ``ceil(H/M * (1-gamma))`` nonzeros — the balance invariant that
+makes the hardware workload uniform (property-tested).
+
+Two granularities are provided:
+  * element-granular (``cbtd_mask``) — bit-faithful Alg. 1;
+  * tile-granular (``cbtd_tile_mask``) — the TPU-native adaptation where
+    the "PE" is an MXU tile row and pruning keeps a balanced number of
+    (tr x tc) tiles per tile-column (DESIGN.md §2).
+
+``CBTDSchedule`` implements Alg. 2's annealing: alpha ramps 0 -> 1 with
+step ``delta_alpha`` per epoch while gamma stays fixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _subcolumn_view(w: jax.Array, m: int) -> jax.Array:
+    """[H, Q] -> [M, H/M, Q] with interleaved row assignment (row r -> PE r%M)."""
+    h, q = w.shape
+    if h % m != 0:
+        raise ValueError(f"column height {h} not divisible by M={m}")
+    # rows r = k*M + i  ->  (i, k):  reshape splits r into (k, i).
+    return w.reshape(h // m, m, q).transpose(1, 0, 2)
+
+
+def _subcolumn_unview(s: jax.Array) -> jax.Array:
+    """Inverse of _subcolumn_view: [M, H/M, Q] -> [H, Q]."""
+    m, k, q = s.shape
+    return s.transpose(1, 0, 2).reshape(m * k, q)
+
+
+def drop_count(h: int, m: int, gamma: float) -> int:
+    """Alg. 1: number of dropped elements per subcolumn = floor(H/M * gamma)."""
+    return int((h // m) * gamma)
+
+
+def keep_count(h: int, m: int, gamma: float) -> int:
+    """Nonzeros per subcolumn after CBTD at alpha=1 (= CBCSC BLEN, Alg. 3)."""
+    return (h // m) - drop_count(h, m, gamma)
+
+
+def _rank_by_magnitude(s: jax.Array) -> jax.Array:
+    """Rank (0 = smallest |.|) of every element along axis=1 of [M, S, Q]."""
+    order = jnp.argsort(jnp.abs(s), axis=1)           # positions sorted by |.|
+    ranks = jnp.argsort(order, axis=1)                # inverse permutation
+    return ranks
+
+
+def cbtd_mask(
+    w: jax.Array,
+    gamma: float,
+    m: int,
+    alpha: float | jax.Array = 1.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Alg. 1: boolean keep-mask for ``w`` under CBTD.
+
+    alpha < 1 requires ``key`` (stochastic targeted dropout).  alpha == 1 is
+    deterministic and gives the exact balance invariant.
+    """
+    h, q = w.shape
+    s = _subcolumn_view(w, m)                          # [M, S, Q]
+    k_drop = drop_count(h, m, gamma)
+    ranks = _rank_by_magnitude(s)
+    candidates = ranks < k_drop                        # smallest-k per subcolumn
+
+    alpha = jnp.asarray(alpha, w.dtype)
+    if key is None:
+        drop = candidates & (alpha >= 1.0)
+    else:
+        u = jax.random.uniform(key, s.shape, dtype=w.dtype)
+        drop = candidates & (u < alpha)
+    return _subcolumn_unview(~drop)
+
+
+def apply_cbtd(
+    w: jax.Array,
+    gamma: float,
+    m: int,
+    alpha: float | jax.Array = 1.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Alg. 1 applied: returns the pruned matrix (w * mask)."""
+    return w * cbtd_mask(w, gamma, m, alpha, key).astype(w.dtype)
+
+
+# Tile-granular variant (TPU adaptation) -----------------------------------
+
+
+def cbtd_tile_mask(
+    w: jax.Array,
+    gamma: float,
+    tile: Tuple[int, int] = (8, 128),
+    alpha: float | jax.Array = 1.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Tile-balanced CBTD: keep a fixed number of (tr x tc) tiles per
+    tile-column, ranked by tile Frobenius norm.  The serving kernel then
+    skips whole missing tiles (MXU-friendly).  Balance invariant: every
+    tile-column keeps exactly ``ceil(n_tile_rows * (1-gamma))`` tiles when
+    alpha = 1."""
+    tr, tc = tile
+    h, q = w.shape
+    if h % tr or q % tc:
+        raise ValueError(f"shape {w.shape} not divisible by tile {tile}")
+    n_r, n_c = h // tr, q // tc
+    tiles = w.reshape(n_r, tr, n_c, tc)
+    norms = jnp.sqrt(jnp.sum(tiles.astype(jnp.float32) ** 2, axis=(1, 3)))  # [n_r, n_c]
+    k_drop = int(n_r * gamma)
+    ranks = jnp.argsort(jnp.argsort(norms, axis=0), axis=0)
+    candidates = ranks < k_drop
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if key is None:
+        drop = candidates & (alpha >= 1.0)
+    else:
+        u = jax.random.uniform(key, norms.shape)
+        drop = candidates & (u < alpha)
+    keep = ~drop                                        # [n_r, n_c]
+    return jnp.repeat(jnp.repeat(keep, tr, axis=0), tc, axis=1)
+
+
+# Training schedule (Alg. 2) ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CBTDConfig:
+    """Per-layer CBTD configuration."""
+
+    gamma: float = 0.94          # target sparsity
+    m: int = 64                  # PEs per column (subcolumn granularity)
+    delta_alpha: float = 1.0 / 30.0  # alpha ramp per epoch (paper: 1/30)
+    granularity: str = "element"     # "element" | "tile"
+    tile: Tuple[int, int] = (8, 128)
+
+    def mask_fn(self, w, alpha=1.0, key=None):
+        if self.granularity == "element":
+            return cbtd_mask(w, self.gamma, self.m, alpha, key)
+        return cbtd_tile_mask(w, self.gamma, self.tile, alpha, key)
+
+
+def alpha_at(epoch: int | jax.Array, delta_alpha: float) -> jax.Array:
+    """Alg. 2: alpha ramps from 0 by delta_alpha per epoch, clipped at 1."""
+    return jnp.minimum(jnp.asarray(epoch, jnp.float32) * delta_alpha, 1.0)
+
+
+def effective_m(h: int, m: int) -> int:
+    """Largest power-of-two divisor of ``h`` that is <= m (CBTD needs
+    M | H; stacked-model matrices have odd heights like 3352)."""
+    while m > 1 and h % m:
+        m //= 2
+    return max(m, 1)
+
+
+def cbtd_prune_tree(
+    params,
+    layout: Dict[str, CBTDConfig],
+    alpha: float | jax.Array,
+    key: Optional[jax.Array] = None,
+):
+    """Apply CBTD to every matching weight (by '/'-joined tree-path
+    substring).  2-D leaves are pruned directly; >=3-D leaves (layer-stacked
+    [L, H, Q] or expert-stacked [L, E, H, Q]) are pruned per trailing
+    matrix via vmap.  Non-matching leaves pass through.  This is the
+    trainer's post-update hook (Alg. 2)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    n = len(flat)
+    keys = (
+        jax.random.split(key, n) if key is not None else [None] * n
+    )
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        cfg = _match_layout(name, layout)
+        if cfg is None or leaf.ndim < 2:
+            out.append(leaf)
+            continue
+        h = leaf.shape[-2]
+        m_eff = effective_m(h, cfg.m) if cfg.granularity == "element" else cfg.m
+
+        def prune2d(w, k=keys[i], cfg=cfg, m_eff=m_eff):
+            if cfg.granularity == "element":
+                mask = cbtd_mask(w, cfg.gamma, m_eff, alpha, k)
+            else:
+                mask = cbtd_tile_mask(w, cfg.gamma, cfg.tile, alpha, k)
+            return w * mask.astype(w.dtype)
+
+        if leaf.ndim == 2:
+            out.append(prune2d(leaf))
+        else:
+            lead = leaf.shape[:-2]
+            flat_w = leaf.reshape((-1,) + leaf.shape[-2:])
+            pruned = jax.vmap(prune2d)(flat_w)
+            out.append(pruned.reshape(lead + leaf.shape[-2:]))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _match_layout(name: str, layout: Dict[str, CBTDConfig]) -> Optional[CBTDConfig]:
+    for pat, cfg in layout.items():
+        if pat == "*" or pat in name:
+            return cfg
+    return None

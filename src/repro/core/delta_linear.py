@@ -1,0 +1,72 @@
+"""DeltaLinear — eq. (2) generalised to any linear layer applied over time.
+
+    y_t = W Δx_t + y_{t-1},   Δx_t thresholded per eqs. (4)-(5)
+
+This is the framework's generalisation of the paper's insight beyond the
+LSTM: *any* time-distributed linear layer over a temporally smooth signal
+(speech frames, SSM conv features, recurrent-block inputs) can skip weight
+columns for sub-threshold deltas.  For token-embedding inputs (text LMs)
+the mechanism is supported but yields near-zero sparsity — measured and
+reported, see DESIGN.md §Arch-applicability.
+
+State per layer: (x̂ reference input, y running output).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta_lstm import delta_threshold
+
+
+class DeltaLinearState(NamedTuple):
+    x_hat: jax.Array  # [..., D]
+    y: jax.Array      # [..., O]
+
+
+def init_delta_linear_state(
+    batch_shape: Tuple[int, ...], input_dim: int, out_dim: int,
+    bias: Optional[jax.Array] = None, dtype=jnp.float32,
+) -> DeltaLinearState:
+    y0 = jnp.zeros(batch_shape + (out_dim,), dtype)
+    if bias is not None:
+        y0 = y0 + bias.astype(dtype)
+    return DeltaLinearState(
+        x_hat=jnp.zeros(batch_shape + (input_dim,), dtype), y=y0
+    )
+
+
+def delta_linear_step(
+    w: jax.Array,
+    state: DeltaLinearState,
+    x: jax.Array,
+    theta: float | jax.Array,
+) -> Tuple[DeltaLinearState, jax.Array, Dict[str, jax.Array]]:
+    """One step. w: [O, D]; x: [..., D] -> y: [..., O]."""
+    dx, x_hat = delta_threshold(x, state.x_hat, theta)
+    y = state.y + dx @ w.T
+    aux = {"nnz_dx": jnp.sum(dx != 0, axis=-1).astype(jnp.int32)}
+    return DeltaLinearState(x_hat=x_hat, y=y), y, aux
+
+
+def delta_linear_over_time(
+    w: jax.Array,
+    xs: jax.Array,
+    theta: float | jax.Array,
+    bias: Optional[jax.Array] = None,
+    state: Optional[DeltaLinearState] = None,
+) -> Tuple[jax.Array, DeltaLinearState, Dict[str, jax.Array]]:
+    """Scan over the leading (time) axis. xs: [T, ..., D] -> [T, ..., O]."""
+    out_dim, input_dim = w.shape
+    if state is None:
+        state = init_delta_linear_state(xs.shape[1:-1], input_dim, out_dim,
+                                        bias, xs.dtype)
+
+    def step(carry, x):
+        carry, y, aux = delta_linear_step(w, carry, x, theta)
+        return carry, (y, aux["nnz_dx"])
+
+    state, (ys, nnz) = jax.lax.scan(step, state, xs)
+    return ys, state, {"nnz_dx": nnz}

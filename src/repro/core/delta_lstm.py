@@ -1,0 +1,218 @@
+"""DeltaLSTM — the paper's core algorithm (Sec. II-B, eqs. 3-7).
+
+An LSTM whose gate pre-activations are *delta memories* ``D`` accumulated
+over time from thresholded temporal deltas of the input and hidden state:
+
+    D_{g,t} = W_xg Δx_t + W_hg Δh_{t-1} + D_{g,t-1}
+
+Zeroing deltas below the threshold Θ makes the delta vectors sparse, which
+on sparsity-aware hardware skips entire columns of the stacked weight
+matrix (temporal sparsity).  Reference states ``x̂ / ĥ`` are updated only
+when the corresponding delta crosses the threshold, so no error accumulates
+(eqs. 4-7).
+
+At Θ=0 the DeltaLSTM is mathematically identical to the plain LSTM (tested
+bit-for-bit up to float associativity in tests/test_delta_lstm.py).
+
+Gate stacking order everywhere in this repo follows eq. (8): (i, g, f, o).
+Weights are stored stacked: W_x [4H, D], W_h [4H, H] so the hardware view
+of eq. (8) — one [4H, D+H] matrix multiplied by the concatenated delta
+state vector — is a single concatenation away (see core/cbcsc.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+class DeltaLSTMState(NamedTuple):
+    """Carried state of one DeltaLSTM layer (one batch row: shapes [·])."""
+
+    h: jax.Array      # hidden state            [H]
+    c: jax.Array      # cell state              [H]
+    x_hat: jax.Array  # reference input  x̂      [D]
+    h_hat: jax.Array  # reference hidden ĥ      [H]
+    dm: jax.Array     # delta memories D        [4, H]
+
+
+def init_lstm_params(
+    key: jax.Array, input_dim: int, hidden_dim: int, dtype=jnp.float32
+) -> Params:
+    """Standard LSTM parameter init (uniform fan-in, forget-bias 1)."""
+    k1, k2 = jax.random.split(key)
+    bound = 1.0 / jnp.sqrt(hidden_dim)
+    w_x = jax.random.uniform(k1, (4 * hidden_dim, input_dim), dtype, -bound, bound)
+    w_h = jax.random.uniform(k2, (4 * hidden_dim, hidden_dim), dtype, -bound, bound)
+    b = jnp.zeros((4, hidden_dim), dtype)
+    # forget gate (index 2 in i,g,f,o order) bias = 1: standard trick.
+    b = b.at[2].set(1.0)
+    return {"w_x": w_x, "w_h": w_h, "b": b}
+
+
+def init_delta_lstm_state(
+    input_dim: int, hidden_dim: int, params: Optional[Params] = None, dtype=jnp.float32
+) -> DeltaLSTMState:
+    """Initial state. Per the paper, delta memories at t=1 equal the biases."""
+    dm0 = (
+        params["b"].astype(dtype)
+        if params is not None
+        else jnp.zeros((4, hidden_dim), dtype)
+    )
+    return DeltaLSTMState(
+        h=jnp.zeros((hidden_dim,), dtype),
+        c=jnp.zeros((hidden_dim,), dtype),
+        x_hat=jnp.zeros((input_dim,), dtype),
+        h_hat=jnp.zeros((hidden_dim,), dtype),
+        dm=dm0,
+    )
+
+
+def _gates(pre: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """pre: [4, H] stacked (i, g, f, o) pre-activations."""
+    i = jax.nn.sigmoid(pre[0])
+    g = jnp.tanh(pre[1])
+    f = jax.nn.sigmoid(pre[2])
+    o = jax.nn.sigmoid(pre[3])
+    return i, g, f, o
+
+
+def lstm_step(
+    params: Params, h: jax.Array, c: jax.Array, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Plain LSTM step, eq. (1). Shapes: x [D], h,c [H]."""
+    hdim = h.shape[-1]
+    pre = (params["w_x"] @ x + params["w_h"] @ h).reshape(4, hdim) + params["b"]
+    i, g, f, o = _gates(pre)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def delta_threshold(
+    cur: jax.Array, ref: jax.Array, theta: float | jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Eqs. (4)-(7): thresholded delta and updated reference state.
+
+    Returns (delta, new_ref) where delta[i] = cur[i]-ref[i] if |·|>Θ else 0,
+    and new_ref[i] = cur[i] if the delta fired else ref[i].
+    """
+    raw = cur - ref
+    fired = jnp.abs(raw) > theta
+    delta = jnp.where(fired, raw, jnp.zeros_like(raw))
+    new_ref = jnp.where(fired, cur, ref)
+    return delta, new_ref
+
+
+def delta_lstm_step(
+    params: Params,
+    state: DeltaLSTMState,
+    x: jax.Array,
+    theta: float | jax.Array,
+) -> Tuple[DeltaLSTMState, jax.Array, Dict[str, jax.Array]]:
+    """One DeltaLSTM step, eqs. (3)-(7).
+
+    Returns (new_state, h, aux) where aux carries the delta vectors'
+    occupancy needed for sparsity statistics and the hardware model.
+    """
+    hdim = state.h.shape[-1]
+    dx, x_hat = delta_threshold(x, state.x_hat, theta)
+    dh, h_hat = delta_threshold(state.h, state.h_hat, theta)
+
+    dm = state.dm + (params["w_x"] @ dx + params["w_h"] @ dh).reshape(4, hdim)
+    i, g, f, o = _gates(dm)
+    c = f * state.c + i * g
+    h = o * jnp.tanh(c)
+
+    aux = {
+        "nnz_dx": jnp.sum(dx != 0).astype(jnp.int32),
+        "nnz_dh": jnp.sum(dh != 0).astype(jnp.int32),
+        "dx_mask": dx != 0,
+        "dh_mask": dh != 0,
+    }
+    return DeltaLSTMState(h=h, c=c, x_hat=x_hat, h_hat=h_hat, dm=dm), h, aux
+
+
+def lstm_layer(
+    params: Params, xs: jax.Array, h0: Optional[jax.Array] = None,
+    c0: Optional[jax.Array] = None
+) -> jax.Array:
+    """Plain LSTM over a sequence. xs: [T, D] -> [T, H]."""
+    hdim = params["w_h"].shape[-1]
+    h = jnp.zeros((hdim,), xs.dtype) if h0 is None else h0
+    c = jnp.zeros((hdim,), xs.dtype) if c0 is None else c0
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_step(params, h, c, x)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h, c), xs)
+    return hs
+
+
+def delta_lstm_layer(
+    params: Params,
+    xs: jax.Array,
+    theta: float | jax.Array,
+    state: Optional[DeltaLSTMState] = None,
+) -> Tuple[jax.Array, DeltaLSTMState, Dict[str, jax.Array]]:
+    """DeltaLSTM over a sequence. xs: [T, D] -> (hs [T, H], final state, aux).
+
+    aux["nnz_dx"]/["nnz_dh"]: per-step nonzero delta counts [T] — these are
+    exactly the NZV stream occupancies that the Spartus IPU would emit, and
+    they drive both the hardware performance model and the balance-ratio
+    statistic (eq. 10).
+    """
+    input_dim = params["w_x"].shape[-1]
+    hdim = params["w_h"].shape[-1]
+    if state is None:
+        state = init_delta_lstm_state(input_dim, hdim, params, xs.dtype)
+
+    def step(carry, x):
+        carry, h, aux = delta_lstm_step(params, carry, x, theta)
+        return carry, (h, aux["nnz_dx"], aux["nnz_dh"], aux["dx_mask"], aux["dh_mask"])
+
+    state, (hs, nnz_dx, nnz_dh, dx_masks, dh_masks) = jax.lax.scan(step, state, xs)
+    aux = {
+        "nnz_dx": nnz_dx,
+        "nnz_dh": nnz_dh,
+        "dx_masks": dx_masks,
+        "dh_masks": dh_masks,
+    }
+    return hs, state, aux
+
+
+# Batched wrappers --------------------------------------------------------
+
+lstm_layer_batched = jax.vmap(lstm_layer, in_axes=(None, 0))
+
+
+@functools.partial(jax.vmap, in_axes=(None, 0, None, 0))
+def _delta_lstm_layer_batched(params, xs, theta, state):
+    return delta_lstm_layer(params, xs, theta, state)
+
+
+def delta_lstm_layer_batched(
+    params: Params,
+    xs: jax.Array,
+    theta: float | jax.Array,
+    state: Optional[DeltaLSTMState] = None,
+):
+    """Batched DeltaLSTM. xs: [B, T, D]."""
+    bsz = xs.shape[0]
+    input_dim = params["w_x"].shape[-1]
+    hdim = params["w_h"].shape[-1]
+    if state is None:
+        s = init_delta_lstm_state(input_dim, hdim, params, xs.dtype)
+        state = jax.tree.map(lambda a: jnp.broadcast_to(a, (bsz,) + a.shape), s)
+    return _delta_lstm_layer_batched(params, xs, theta, state)
+
+
+def stacked_weight_matrix(params: Params) -> jax.Array:
+    """Eq. (8): the [4H, D+H] stacked matrix the accelerator actually stores."""
+    return jnp.concatenate([params["w_x"], params["w_h"]], axis=1)

@@ -1,0 +1,83 @@
+"""Fixed-point quantization (Sec. IV-E / V-B).
+
+The paper trains with "dual-copy rounding" (Stromatias et al. 2015): a
+full-precision shadow copy receives gradient updates while the forward
+pass sees the quantized weights.  In JAX this is the straight-through
+estimator: ``w + stop_gradient(q(w) - w)``.
+
+Formats used by the hardware: INT8 weights (Q1.7-style per-tensor scale),
+INT16 activations (Q8.8 in EdgeDRNN lineage).  We keep scales as powers of
+two — exactly what the FPGA shifts implement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    weight_bits: int = 8
+    act_bits: int = 16
+    # fractional bits for activations (Q8.8 by default, like EdgeDRNN/Spartus)
+    act_frac_bits: int = 8
+    enabled: bool = True
+
+
+def pow2_scale_for(w: jax.Array, bits: int) -> jax.Array:
+    """Smallest power-of-two scale covering max|w| in a signed ``bits`` grid."""
+    amax = jnp.max(jnp.abs(w))
+    amax = jnp.maximum(amax, 1e-8)
+    qmax = 2.0 ** (bits - 1) - 1
+    # scale = 2^ceil(log2(amax/qmax))
+    return 2.0 ** jnp.ceil(jnp.log2(amax / qmax))
+
+
+def quantize(w: jax.Array, bits: int, scale: Optional[jax.Array] = None) -> jax.Array:
+    """Uniform symmetric fake-quant to ``bits`` with round-to-nearest."""
+    if scale is None:
+        scale = pow2_scale_for(w, bits)
+    qmax = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def fake_quant_ste(w: jax.Array, bits: int, scale: Optional[jax.Array] = None) -> jax.Array:
+    """Dual-copy rounding: forward = quantized, backward = identity."""
+    return w + jax.lax.stop_gradient(quantize(w, bits, scale) - w)
+
+
+def quantize_act(x: jax.Array, bits: int = 16, frac_bits: int = 8) -> jax.Array:
+    """Fixed-point Qm.n activation quantization (deterministic scale 2^-n)."""
+    scale = 2.0 ** (-frac_bits)
+    qmax = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def fake_quant_act_ste(x: jax.Array, bits: int = 16, frac_bits: int = 8) -> jax.Array:
+    return x + jax.lax.stop_gradient(quantize_act(x, bits, frac_bits) - x)
+
+
+def quantize_tree(params, bits: int = 8):
+    """Quantize every floating-point leaf (deployment-time, no STE)."""
+    def q(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.ndim >= 1:
+            return quantize(leaf, bits)
+        return leaf
+    return jax.tree.map(q, params)
+
+
+def int8_pack(w: jax.Array, scale: Optional[jax.Array] = None):
+    """Actual int8 storage (for footprint accounting / serving export)."""
+    if scale is None:
+        scale = pow2_scale_for(w, 8)
+    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_unpack(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale

@@ -1,0 +1,108 @@
+"""Sparsity statistics & op accounting — eqs. (9)-(10), Table II/IV columns.
+
+Everything the paper measures about sparsity is reproduced here from the
+actual delta masks / weight masks of the JAX model:
+
+  * temporal sparsity (fraction of zero deltas; Fig. 13a),
+  * weight sparsity (fraction of zero weights; Table II),
+  * balance ratio BR across N MAC arrays (eq. 10; Fig. 12),
+  * arithmetic-op savings of the MxV (Table II last column),
+  * model size in MB at a given weight precision (Table II).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def temporal_sparsity(delta_masks: jax.Array) -> jax.Array:
+    """Fraction of *zero* deltas.  delta_masks: bool, True = nonzero."""
+    return 1.0 - jnp.mean(delta_masks.astype(jnp.float32))
+
+
+def weight_sparsity(w: jax.Array) -> jax.Array:
+    return jnp.mean((w == 0).astype(jnp.float32))
+
+
+def tree_weight_sparsity(params) -> float:
+    leaves = [l for l in jax.tree.leaves(params) if hasattr(l, "ndim") and l.ndim == 2]
+    zeros = sum(float(jnp.sum(l == 0)) for l in leaves)
+    total = sum(l.size for l in leaves)
+    return zeros / max(total, 1)
+
+
+def balance_ratio(delta_masks: jax.Array, n_arrays: int) -> jax.Array:
+    """Eq. (10).  delta_masks: [T, F] bool (True = nonzero delta element).
+
+    The state vector is partitioned into N contiguous segments, one per MAC
+    array (Sec. IV-B: "the state vector is partitioned into N equal
+    segments, each of which is fed into a DPE").  WL_t^n = nonzeros in
+    segment n at step t.  BR = sum_t mean_n WL / sum_t max_n WL.
+    """
+    t, f = delta_masks.shape
+    pad = (-f) % n_arrays
+    if pad:
+        delta_masks = jnp.pad(delta_masks, ((0, 0), (0, pad)))
+    wl = jnp.sum(
+        delta_masks.reshape(t, n_arrays, -1).astype(jnp.float32), axis=-1
+    )  # [T, N]
+    mean_wl = jnp.mean(wl, axis=1)
+    max_wl = jnp.max(wl, axis=1)
+    return jnp.sum(mean_wl) / jnp.maximum(jnp.sum(max_wl), 1.0)
+
+
+def lstm_layer_macs(input_dim: int, hidden_dim: int) -> int:
+    """Dense MxV MACs of one LSTM step (the 8 stacked matrices, eq. 8)."""
+    return 4 * hidden_dim * (input_dim + hidden_dim)
+
+
+def lstm_layer_ops(input_dim: int, hidden_dim: int) -> int:
+    """Op count (1 MAC = 2 Op), the unit of the paper's TOp/s numbers."""
+    return 2 * lstm_layer_macs(input_dim, hidden_dim)
+
+
+def op_saving(weight_sparsity: float, temporal_sparsity: float) -> float:
+    """Table II 'Arithmetic Operations Saving': dense ops / remaining ops.
+
+    Spatial sparsity removes (gamma) of each column; temporal sparsity
+    removes whole columns.  Savings compose multiplicatively:
+        saving = 1 / ((1 - ws) * (1 - ts)).
+    E.g. ws=93.75%, ts=90.6%  ->  1/(0.0625*0.094) = 170x  (Table II).
+    """
+    rem = (1.0 - weight_sparsity) * (1.0 - temporal_sparsity)
+    return 1.0 / max(rem, 1e-12)
+
+
+def model_size_mb(n_params: int, bits: int) -> float:
+    return n_params * bits / 8 / 1e6
+
+
+def sparse_model_size_mb(n_params: int, ws: float, val_bits: int, idx_bits: int) -> float:
+    """Compressed size with CBCSC (VAL + LIDX per nonzero)."""
+    nnz = n_params * (1.0 - ws)
+    return nnz * (val_bits + idx_bits) / 8 / 1e6
+
+
+def effective_mac_trace(
+    nnz_dx: jax.Array, nnz_dh: jax.Array, input_dim: int, hidden_dim: int,
+    weight_sparsity: float,
+) -> jax.Array:
+    """Per-step MACs actually executed by a spatio-temporally sparse MxV:
+    (active columns) x (nonzeros per column).  nnz_*: [T] int."""
+    rows = 4 * hidden_dim * (1.0 - weight_sparsity)
+    return (nnz_dx + nnz_dh).astype(jnp.float32) * rows
+
+
+def summarize_delta_aux(aux: Dict[str, jax.Array], input_dim: int, hidden_dim: int):
+    """Roll an aux dict from delta_lstm_layer into the paper's statistics."""
+    ts_x = 1.0 - float(jnp.mean(aux["nnz_dx"]) / input_dim)
+    ts_h = 1.0 - float(jnp.mean(aux["nnz_dh"]) / hidden_dim)
+    total = float(jnp.mean(aux["nnz_dx"] + aux["nnz_dh"])) / (input_dim + hidden_dim)
+    return {
+        "temporal_sparsity_dx": ts_x,
+        "temporal_sparsity_dh": ts_h,
+        "temporal_sparsity": 1.0 - total,
+    }

@@ -1,0 +1,86 @@
+"""Synthetic LM token pipeline for the assigned transformer architectures.
+
+Zipf-distributed unigrams mixed with a first-order Markov back-off so the
+streams are learnable (loss decreases measurably within a few hundred
+steps) while requiring no disk.  Deterministic in (seed, process, step) —
+same sharding contract as data/speech.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 32000
+    seq_len: int = 1024
+    zipf_a: float = 1.1
+    markov_states: int = 256   # size of the hidden bigram table
+    seed: int = 0
+
+
+def _zipf_logits(cfg: LMConfig) -> jax.Array:
+    ranks = jnp.arange(1, cfg.vocab + 1, dtype=jnp.float32)
+    return -cfg.zipf_a * jnp.log(ranks)
+
+
+def _bigram_table(cfg: LMConfig) -> jax.Array:
+    """[markov_states, vocab] logits; tokens hash into markov states."""
+    key = jax.random.key(cfg.seed + 7)
+    return jax.random.gumbel(key, (cfg.markov_states, cfg.vocab)) * 2.0
+
+
+def sample_tokens(key: jax.Array, cfg: LMConfig, batch: int) -> jax.Array:
+    """[B, S+1] token streams (callers slice input/target views)."""
+    base = _zipf_logits(cfg)
+    table = _bigram_table(cfg)
+
+    def sample_one(k):
+        k0, kseq = jax.random.split(k)
+        first = jax.random.categorical(k0, base)
+        keys = jax.random.split(kseq, cfg.seq_len)
+
+        def step(prev, kk):
+            state = prev % cfg.markov_states
+            logits = base + table[state]
+            tok = jax.random.categorical(kk, logits)
+            return tok, tok
+
+        _, toks = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[None], toks])
+
+    return jax.vmap(sample_one)(jax.random.split(key, batch)).astype(jnp.int32)
+
+
+class LMDataset:
+    """Sharded iterator yielding (tokens [B,S], targets [B,S])."""
+
+    def __init__(self, cfg: LMConfig, batch_per_host: int,
+                 process_index: int = 0, start_step: int = 0):
+        self.cfg = cfg
+        self.batch = batch_per_host
+        self.process_index = process_index
+        self.step = start_step
+        self._root = jax.random.key(cfg.seed + 11)
+        self._make = jax.jit(lambda k: sample_tokens(k, cfg, batch_per_host))
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._root, self.process_index), self.step
+        )
+        self.step += 1
+        stream = self._make(key)
+        return stream[:, :-1], stream[:, 1:]
+
+    def state_dict(self):
+        return {"step": self.step}
+
+    def load_state_dict(self, state):
+        self.step = int(state["step"])

@@ -1,0 +1,145 @@
+"""Synthetic speech-feature pipeline (offline stand-in for TIMIT/Librispeech).
+
+TIMIT/Librispeech are not available offline, so we synthesise sequences
+with the *statistical properties the paper's mechanism depends on*:
+
+  * piecewise-stationary "phoneme" segments (geometric durations),
+  * slowly-varying (Ornstein-Uhlenbeck) intra-segment feature dynamics —
+    this temporal smoothness is exactly what gives delta networks their
+    sparsity (Fig. 13a), and its time-constant ``tau`` is a config knob so
+    the Theta -> sparsity curve can be swept,
+  * 123-dim features mirroring TIMIT's: 41 static (40 Mel-like + energy)
+    plus first and second temporal derivatives (Sec. V-B),
+  * CTC phoneme targets = the segment class sequence.
+
+Everything is jit-able and deterministic in the dataset key, so any host
+in a multi-pod job can materialise its own shard without I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeechConfig:
+    n_classes: int = 40          # phoneme inventory (excl. blank)
+    n_static: int = 41           # 40 Mel-like + energy
+    avg_segment: int = 8         # mean phoneme duration (frames)
+    tau: float = 0.9             # OU smoothness (higher = smoother = sparser deltas)
+    noise: float = 0.15          # observation noise
+    max_frames: int = 128
+    seed: int = 0
+
+    @property
+    def feat_dim(self) -> int:   # static + delta + delta-delta
+        return 3 * self.n_static
+
+    @property
+    def vocab(self) -> int:      # CTC classes: blank(0) + phonemes
+        return self.n_classes + 1
+
+
+def class_means(cfg: SpeechConfig) -> jax.Array:
+    """Fixed per-class target vectors (the dataset's 'formant' table)."""
+    key = jax.random.key(cfg.seed)
+    return jax.random.normal(key, (cfg.n_classes, cfg.n_static)) * 1.5
+
+
+def _derivatives(x: jax.Array) -> jax.Array:
+    """First/second temporal derivative features, concatenated. x: [T, F]."""
+    d1 = jnp.diff(x, axis=0, prepend=x[:1])
+    d2 = jnp.diff(d1, axis=0, prepend=d1[:1])
+    return jnp.concatenate([x, d1, d2], axis=-1)
+
+
+def synth_utterance(
+    key: jax.Array, cfg: SpeechConfig, means: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One utterance: (features [T, 3F], n_frames, labels [T], n_labels).
+
+    labels is padded to T (upper bound on segment count); blank id is 0 so
+    phoneme classes are shifted to 1..n_classes.
+    """
+    t = cfg.max_frames
+    k_seg, k_cls, k_len, k_ou = jax.random.split(key, 4)
+
+    # segment boundaries: bernoulli changes, forced at t=0
+    change = jax.random.bernoulli(k_seg, 1.0 / cfg.avg_segment, (t,))
+    change = change.at[0].set(True)
+    seg_id = jnp.cumsum(change.astype(jnp.int32)) - 1            # [T] 0..n_seg-1
+    seg_class = jax.random.randint(k_cls, (t,), 0, cfg.n_classes)  # per segment
+    frame_class = seg_class[seg_id]                               # [T]
+
+    # utterance length: uniform in [T/2, T]
+    n_frames = jax.random.randint(k_len, (), t // 2, t + 1)
+
+    # OU trajectory toward the active class mean
+    target = means[frame_class]                                   # [T, F]
+    eps = jax.random.normal(k_ou, (t, cfg.n_static)) * cfg.noise
+
+    def step(x, inp):
+        mu, e = inp
+        x = cfg.tau * x + (1.0 - cfg.tau) * mu + e * jnp.sqrt(1 - cfg.tau**2)
+        return x, x
+
+    _, traj = jax.lax.scan(step, target[0], (target, eps))
+    feats = _derivatives(traj)                                    # [T, 3F]
+    mask = (jnp.arange(t) < n_frames)[:, None]
+    feats = feats * mask
+
+    # labels: class of each segment that starts within n_frames
+    starts = change & (jnp.arange(t) < n_frames)
+    n_labels = jnp.sum(starts.astype(jnp.int32))
+    # gather segment classes in order: seg s starts at the s-th True in
+    # `starts`; seg_class at a start frame = frame_class there.
+    order = jnp.argsort(~starts, stable=True)                     # starts first
+    labels = jnp.where(jnp.arange(t) < n_labels, frame_class[order] + 1, 0)
+    return feats, n_frames, labels.astype(jnp.int32), n_labels
+
+
+def make_batch(key: jax.Array, cfg: SpeechConfig, batch: int, means: jax.Array):
+    """(feats [B,T,3F], feat_lens [B], labels [B,T], label_lens [B])."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(synth_utterance, in_axes=(0, None, None))(keys, cfg, means)
+
+
+class SpeechDataset:
+    """Sharded, stateful iterator.  Each (process, step) pair maps to a
+    unique fold of the dataset key, so (a) restarts resume exactly from the
+    checkpointed step and (b) every host in a multi-pod job reads disjoint
+    data with no communication."""
+
+    def __init__(self, cfg: SpeechConfig, batch_per_host: int,
+                 process_index: int = 0, start_step: int = 0):
+        self.cfg = cfg
+        self.batch = batch_per_host
+        self.process_index = process_index
+        self.step = start_step
+        self.means = class_means(cfg)
+        self._root = jax.random.key(cfg.seed + 1)
+        self._make = jax.jit(
+            lambda k: make_batch(k, cfg, batch_per_host, self.means)
+        )
+
+    def _key(self, step: int) -> jax.Array:
+        return jax.random.fold_in(
+            jax.random.fold_in(self._root, self.process_index), step
+        )
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        out = self._make(self._key(self.step))
+        self.step += 1
+        return out
+
+    def state_dict(self):
+        return {"step": self.step}
+
+    def load_state_dict(self, state):
+        self.step = int(state["step"])

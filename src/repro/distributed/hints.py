@@ -1,0 +1,111 @@
+"""Optional sharding annotations inside model code.
+
+Model code calls ``constrain(x, "batch", "model", None, ...)`` at layout-
+critical points (MoE dispatch buffers, vocab-parallel logits).  Outside a
+mesh context this is a no-op, so CPU unit tests and single-device examples
+never see sharding machinery.  Inside jit-with-mesh, unknown axis names
+are dropped (single-pod meshes have no "pod") and non-divisible dims fall
+back to replication — annotations are always valid.
+
+"batch" is a virtual axis name resolving to ("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not mesh.axis_names:
+        return None
+    return mesh
+
+
+def shard_attn(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Layout for an attention block with expanded heads.
+
+    If the head count divides the model axis -> tensor-parallel heads
+    (q/k/v all head-sharded).  Otherwise -> sequence-parallel queries
+    (q rows sharded over "model", k/v replicated): every device computes
+    its own query rows against the full KV, which partitions both the
+    O(S^2) score memory and the flops even for awkward head counts
+    (e.g. qwen2's 14 heads on a 16-wide model axis).
+
+    Under the ``fsdp_sp`` perf variant, sequence parallelism is forced for
+    every arch: weights are FSDP-gathered per layer instead of TP-sharded,
+    which removes the per-layer activation all-reduces (EXPERIMENTS.md
+    §Perf, granite-34b train)."""
+    from repro.perf import current
+
+    mesh = _current_axes()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, k, v
+    tp = mesh.shape["model"]
+    h = q.shape[2]
+    force_sp = current().fsdp_sp
+    if tp > 1 and h % tp == 0 and not force_sp:
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)
+        v = constrain(v, "batch", None, "model", None)
+    elif tp > 1 and q.shape[1] % tp == 0:
+        q = constrain(q, "batch", "model", None, None)
+    return q, k, v
+
+
+def shard_attn_decode(q: jax.Array, ke: jax.Array, ve: jax.Array,
+                      n_kv_heads: int):
+    """Decode-step layout: keep the KV cache's own sharding local.
+
+    Head-shardable caches -> head TP (q too).  Otherwise the cache is
+    SEQUENCE-sharded (sharding.cache_spec) and gathering ~1 GiB/layer of
+    KV per decoded token would dominate the step (measured: 96 GB/step on
+    internlm2 decode_32k).  Constraining the expanded K/V to stay
+    seq-sharded makes XLA compute per-shard partial attention and combine
+    with tiny [B,H] reductions — a distributed flash-decode."""
+    from repro.perf import current
+
+    mesh = _current_axes()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, ke, ve
+    tp = mesh.shape["model"]
+    h = q.shape[2]
+    s = ke.shape[1]
+    # the layout must follow the CACHE: only head-shard when the stored
+    # kv heads themselves shard (else XLA re-gathers the cache per step)
+    if tp > 1 and n_kv_heads % tp == 0 and h % tp == 0:
+        q = constrain(q, "batch", None, "model", None)
+        ke = constrain(ke, "batch", None, "model", None)
+        ve = constrain(ve, "batch", None, "model", None)
+    elif tp > 1 and s % tp == 0 and current().seq_sharded_decode:
+        ke = constrain(ke, "batch", "model", None, None)
+        ve = constrain(ve, "batch", "model", None, None)
+    return q, ke, ve
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    mesh = _current_axes()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for dim, ax in enumerate(axes):
+        if ax == "batch":
+            group = tuple(a for a in ("pod", "data") if a in names)
+            size = 1
+            for a in group:
+                size *= mesh.shape[a]
+            if group and size > 1 and x.shape[dim] % size == 0:
+                spec.append(group if len(group) > 1 else group[0])
+            else:
+                spec.append(None)
+        elif ax in names and mesh.shape[ax] > 1 and x.shape[dim] % mesh.shape[ax] == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

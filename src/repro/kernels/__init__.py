@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the Spartus compute hot-spots.
+
+delta_encode    — DPE: thresholded delta + reference update (Fig. 6)
+stsp_spmv       — MAC arrays: spatio-temporal sparse MxV over CBCSC (Fig. 2/9)
+lstm_pointwise  — HPE: fused gate nonlinearities + cell update (Fig. 8)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper (with XLA
+fallback) in ops.py.  See tests/test_kernels.py for the shape/dtype sweeps.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.delta_encode import delta_encode_pallas
+from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
+from repro.kernels.stsp_spmv import stsp_spmv_pallas

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused delta encoding (the Spartus DPE, Fig. 6).
+
+Computes eqs. (4)-(5) in one pass over the state vector: thresholded delta,
+reference-state update, and per-block nonzero counts (the NZV occupancy
+used for capacity selection and balance-ratio statistics).
+
+TPU mapping: the state vector is viewed as [R, 128] (lane-aligned); the
+grid walks row-blocks of 8 sublanes, so each step owns one (8, 128) VMEM
+tile — the elementwise threshold/select runs entirely on the VPU.  The
+per-block count is a scalar write to SMEM-resident output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+LANES = 128
+
+
+def _delta_encode_kernel(theta_ref, x_ref, xh_ref, delta_ref, xh_out_ref, nnz_ref):
+    x = x_ref[...]
+    xh = xh_ref[...]
+    raw = x - xh
+    fired = jnp.abs(raw) > theta_ref[0]
+    delta_ref[...] = jnp.where(fired, raw, jnp.zeros_like(raw))
+    xh_out_ref[...] = jnp.where(fired, x, xh)
+    nnz_ref[0] = jnp.sum(fired.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_encode_pallas(
+    x: jax.Array, x_hat: jax.Array, theta: jax.Array, *, interpret: bool = True
+):
+    """x, x_hat: [F] with F % (8*128) == 0 (callers pad; see ops.py).
+
+    Returns (delta [F], new_x_hat [F], nnz_per_block [F/1024] int32).
+    """
+    f = x.shape[0]
+    assert f % (BLOCK_ROWS * LANES) == 0, f"F={f} must be padded to 1024"
+    rows = f // LANES
+    n_blocks = rows // BLOCK_ROWS
+    x2 = x.reshape(rows, LANES)
+    xh2 = x_hat.reshape(rows, LANES)
+    theta_arr = jnp.asarray(theta, x.dtype).reshape(1)
+
+    delta, new_xh, nnz = pl.pallas_call(
+        _delta_encode_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),                     # theta
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda b: (b, 0)),    # x
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda b: (b, 0)),    # x_hat
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda b: (b, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(theta_arr, x2, xh2)
+    return delta.reshape(f), new_xh.reshape(f), nnz

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused LSTM gate pointwise math (the Spartus HPE,
+Fig. 8 — sigmoid/tanh units + pointwise multiply-add after the adder
+trees).
+
+Input is the delta-memory tensor DM [4, H] (gate order i, g, f, o per
+eq. 8) and the cell state c [H]; outputs are (h, c').  One VMEM tile of
+every gate row is resident per grid step, so the whole cell update is a
+single VPU pass with no HBM round-trips between gates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK = 512  # elements of H per grid step (4 sublane rows x 128)
+
+
+def _lstm_pointwise_kernel(dm_ref, c_ref, h_ref, c_out_ref):
+    i = jax.nn.sigmoid(dm_ref[0, :])
+    g = jnp.tanh(dm_ref[1, :])
+    f = jax.nn.sigmoid(dm_ref[2, :])
+    o = jax.nn.sigmoid(dm_ref[3, :])
+    c_new = f * c_ref[...] + i * g
+    h_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_pointwise_pallas(dm: jax.Array, c: jax.Array, *, interpret: bool = True):
+    """dm: [4, H], c: [H], H % 512 == 0 -> (h [H], c' [H])."""
+    h_dim = c.shape[0]
+    assert dm.shape == (4, h_dim)
+    assert h_dim % BLOCK == 0, f"H={h_dim} must be padded to {BLOCK}"
+    n_blocks = h_dim // BLOCK
+
+    h, c_new = pl.pallas_call(
+        _lstm_pointwise_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((4, BLOCK), lambda b: (0, b)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+            pl.BlockSpec((BLOCK,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h_dim,), dm.dtype),
+            jax.ShapeDtypeStruct((h_dim,), dm.dtype),
+        ],
+        interpret=interpret,
+    )(dm, c)
+    return h, c_new

@@ -1,0 +1,117 @@
+"""jit'd public wrappers for the Pallas kernels + XLA fallback paths.
+
+``use_pallas`` selects the Pallas implementation (interpret=True on CPU,
+compiled on TPU); the default XLA path implements identical math with
+gather/einsum and is what the dry-run lowers (TPU Pallas cannot compile on
+the CPU backend — DESIGN.md §6).
+
+Also hosts ``select_active_columns`` — the fixed-capacity NZI list builder
+(the static-shape translation of the Spartus DPE's NZV/NZI streams).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delta_encode import delta_encode_pallas
+from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
+from repro.kernels.stsp_spmv import stsp_spmv_pallas
+from repro.kernels import ref as _ref
+
+PAD_ALIGN = 1024  # delta_encode tile: 8 sublanes x 128 lanes
+
+
+def _pad_to(x: jax.Array, align: int) -> Tuple[jax.Array, int]:
+    f = x.shape[0]
+    pad = (-f) % align
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, f
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def delta_encode(
+    x: jax.Array, x_hat: jax.Array, theta,
+    *, use_pallas: bool = False, interpret: bool = True,
+):
+    """Eqs. (4)-(5). x, x_hat: [F] any length (padded internally).
+    Returns (delta [F], new_x_hat [F], nnz scalar int32)."""
+    if not use_pallas:
+        return _ref.delta_encode_ref(x, x_hat, theta)
+    xp, f = _pad_to(x, PAD_ALIGN)
+    xhp, _ = _pad_to(x_hat, PAD_ALIGN)
+    delta, new_xh, nnz = delta_encode_pallas(xp, xhp, theta, interpret=interpret)
+    return delta[:f], new_xh[:f], jnp.sum(nnz)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lstm_pointwise(
+    dm: jax.Array, c: jax.Array, *, use_pallas: bool = False, interpret: bool = True
+):
+    """HPE gate math. dm: [4, H], c: [H] -> (h, c')."""
+    if not use_pallas:
+        return _ref.lstm_pointwise_ref(dm, c)
+    h_dim = c.shape[0]
+    pad = (-h_dim) % 512
+    if pad:
+        dm = jnp.pad(dm, ((0, 0), (0, pad)))
+        c = jnp.pad(c, (0, pad))
+    h, c_new = lstm_pointwise_pallas(dm, c, interpret=interpret)
+    return h[:h_dim], c_new[:h_dim]
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def select_active_columns(
+    delta: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Build the fixed-capacity NZI/NZV lists from a (sparse) delta vector.
+
+    Deterministic policy: if more than ``capacity`` deltas fired, keep the
+    largest |delta| (drop-smallest overflow, DESIGN.md §9); padding slots
+    get idx=0, val=0.  Returns (idx [K] int32, vals [K], n_dropped)."""
+    mag = jnp.abs(delta)
+    fired = delta != 0
+    neg = jnp.where(fired, -mag, 1.0)            # actives first, by magnitude
+    order = jnp.argsort(neg)[:capacity]
+    valid = fired[order]
+    idx = jnp.where(valid, order, 0).astype(jnp.int32)
+    vals = jnp.where(valid, delta[order], 0).astype(delta.dtype)
+    n_dropped = jnp.maximum(jnp.sum(fired.astype(jnp.int32)) - capacity, 0)
+    return idx, vals, n_dropped
+
+
+def stsp_spmv_xla(
+    val: jax.Array, lidx: jax.Array, idx: jax.Array, ds_vals: jax.Array, s: int
+) -> jax.Array:
+    """XLA gather+einsum path (identical math to the Pallas kernel)."""
+    return _ref.stsp_spmv_ref(val, lidx, idx, ds_vals, s)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "use_pallas", "interpret"))
+def stsp_spmv(
+    val: jax.Array,
+    lidx: jax.Array,
+    idx: jax.Array,
+    ds_vals: jax.Array,
+    *,
+    s: int,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """y [H] = sum_k ds_vals[k] * W_cbcsc[:, idx[k]]  (fp32)."""
+    if not use_pallas:
+        return stsp_spmv_xla(val, lidx, idx, ds_vals, s)
+    return stsp_spmv_pallas(val, lidx, idx, ds_vals, s=s, interpret=interpret)
+
+
+def delta_spmv_dense_gather(
+    w: jax.Array, idx: jax.Array, ds_vals: jax.Array
+) -> jax.Array:
+    """Temporal-sparsity-only path: gather dense columns of w [H, Q] by the
+    active index list and run one [H, K] x [K] MXU matmul.  Used when the
+    weights are not CBCSC-packed (e.g. unpruned baselines)."""
+    panel = jnp.take(w, idx, axis=1)             # [H, K]
+    return panel @ ds_vals

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical spec; kernels must match to float
+tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_encode_ref(
+    x: jax.Array, x_hat: jax.Array, theta: float
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Eqs. (4)-(5): (delta, new_x_hat, nnz). x, x_hat: [F]."""
+    raw = x - x_hat
+    fired = jnp.abs(raw) > theta
+    delta = jnp.where(fired, raw, jnp.zeros_like(raw))
+    new_x_hat = jnp.where(fired, x, x_hat)
+    return delta, new_x_hat, jnp.sum(fired.astype(jnp.int32))
+
+
+def lstm_pointwise_ref(
+    dm: jax.Array, c: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """HPE post-MxV math (Sec. IV-D): dm [4, H] (i,g,f,o), c [H] -> (h, c')."""
+    i = jax.nn.sigmoid(dm[0])
+    g = jnp.tanh(dm[1])
+    f = jax.nn.sigmoid(dm[2])
+    o = jax.nn.sigmoid(dm[3])
+    c_new = f * c + i * g
+    h = o * jnp.tanh(c_new)
+    return h, c_new
+
+
+def stsp_spmv_ref(
+    val: jax.Array,      # [Q, M, BLEN] CBCSC values (0-padded)
+    lidx: jax.Array,     # [Q, M, BLEN] local indices
+    idx: jax.Array,      # [K] active column ids (padded entries arbitrary)
+    ds_vals: jax.Array,  # [K] delta values (0.0 for padding)
+    s: int,              # subcolumn length H/M
+) -> jax.Array:
+    """y[H] = sum_k ds_vals[k] * column(idx[k]), column scattered from
+    CBCSC: row r = lidx*M + pe.  The spec of the Spartus MAC arrays."""
+    q, m, blen = val.shape
+    v = val[idx]                                   # [K, M, BLEN]
+    li = lidx[idx]                                 # [K, M, BLEN]
+    onehot = li[..., None] == jnp.arange(s, dtype=li.dtype)   # [K,M,BLEN,S]
+    contrib = jnp.einsum(
+        "kmb,kmbs->ksm", v.astype(jnp.float32) * ds_vals[:, None, None],
+        onehot.astype(jnp.float32),
+    )                                              # [K, S, M]
+    return jnp.sum(contrib, axis=0).reshape(s * m)  # row r = s*M + m

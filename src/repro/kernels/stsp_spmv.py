@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: spatio-temporal sparse matrix-vector product — the
+heart of the Spartus accelerator (Fig. 2/4/9), adapted for TPU.
+
+Semantics (one DeltaLSTM/DeltaLinear step):
+
+    y[H] = sum_{k < K} ds_vals[k] * W[:, idx[k]]
+
+where W is stored in CBCSC (core/cbcsc.py): ``val/lidx [Q, M, BLEN]``,
+row r = lidx*M + pe.  Only the K *active* columns (nonzero deltas) are
+touched — temporal sparsity — and only BLEN nonzeros per subcolumn are
+stored/fetched — spatial sparsity.
+
+TPU adaptation of the FPGA dataflow (DESIGN.md §2):
+  * NZI list -> scalar-prefetched index vector: the grid's DMA engine
+    fetches exactly the CBCSC slabs of active columns from HBM
+    (``index_map`` reads ``idx_ref[k]``) — this is the "CTRL generates
+    physical WMEM addresses from NZIs" step of Sec. IV-A;
+  * per-PE LUTRAM scatter -> S-wide one-hot contraction in VMEM: each PE's
+    BLEN (value, lidx) pairs expand to its S-length subcolumn on the VPU;
+    with S = 8..32 this costs S*(1-gamma) multiplies per dense-equivalent
+    element (< 1 at the paper's gamma) and stays sublane-aligned;
+  * MAC-array partial sums -> an [S, M] fp32 VMEM accumulator, revisited
+    across the K grid steps ("arbitrary" dimension semantics) and written
+    once at k = K-1.
+
+Workload balance: CBCSC guarantees every "PE" (lane) sees exactly BLEN
+pairs per active column — the same argument as the paper's Sec. III-C,
+with the memory-interface arbitration replaced by a fixed-shape DMA.
+
+The XLA fallback (ops.stsp_spmv_xla) implements the identical math with
+gather + einsum for non-TPU backends and for batched serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stsp_kernel(idx_ref, ds_ref, val_ref, lidx_ref, y_ref, *, s: int, k_total: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    val = val_ref[0]                       # [M, BLEN] this column's slab
+    lidx = lidx_ref[0]                     # [M, BLEN]
+    ds = ds_ref[0]                         # scalar delta value
+
+    # one-hot expand each PE's subcolumn: [M, BLEN, S] -> contribution [S, M]
+    onehot = (lidx[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, s), 2))
+    contrib = jnp.einsum(
+        "mb,mbs->sm",
+        val.astype(jnp.float32),
+        onehot.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[...] += ds.astype(jnp.float32) * contrib
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def stsp_spmv_pallas(
+    val: jax.Array,      # [Q, M, BLEN]
+    lidx: jax.Array,     # [Q, M, BLEN] int32
+    idx: jax.Array,      # [K] int32 active columns (pad: any valid id)
+    ds_vals: jax.Array,  # [K] float (pad: 0.0)
+    *,
+    s: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns y [H] = [S*M] in fp32.  K is static (capacity-padded)."""
+    q, m, blen = val.shape
+    k_total = idx.shape[0]
+
+    kernel = functools.partial(_stsp_kernel, s=s, k_total=k_total)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k_total,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k, idx_ref: (k,)),               # ds_vals
+            pl.BlockSpec((1, m, blen), lambda k, idx_ref: (idx_ref[k], 0, 0)),
+            pl.BlockSpec((1, m, blen), lambda k, idx_ref: (idx_ref[k], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, m), lambda k, idx_ref: (0, 0)),
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, m), jnp.float32),
+        interpret=interpret,
+        compiler_params=(
+            pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+            if not interpret
+            else None
+        ),
+    )(idx, ds_vals, val, lidx)
+    return y.reshape(s * m)

@@ -1,0 +1,172 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants (TPU v5e-class, per assignment):
+    197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+
+Terms (per device — the compiled SPMD module IS the per-device program):
+    compute    = HLO_FLOPs / peak_FLOPs
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+``collective_bytes`` is parsed from the *post-partitioning* HLO
+(``compiled.as_text()``): per instruction we take the result-shape bytes
+and apply a ring-model multiplier with the replica-group size n:
+    all-gather        r * (n-1)/n       (r = full gathered result)
+    reduce-scatter    r * (n-1)         (r = the shard each device keeps)
+    all-reduce        2r * (n-1)/n      (RS + AG)
+    all-to-all        r * (n-1)/n
+    collective-permute r
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,n]<=[N]: G groups of size n
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Tuple[float, Dict[str, float]]:
+    """Per-device ICI bytes, total + per-collective-kind breakdown."""
+    per_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes = m.group(1) or m.group(2)
+        kind = m.group(3)
+        r = _shape_bytes(shapes)
+        n = max(_group_size(line, n_devices), 1)
+        if n == 1:
+            continue
+        if kind == "all-gather":
+            b = r * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = r * (n - 1)
+        elif kind == "all-reduce":
+            b = 2 * r * (n - 1) / n
+        elif kind == "all-to-all":
+            b = r * (n - 1) / n
+        else:  # collective-permute
+            b = r
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+    return sum(per_kind.values()), per_kind
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device bytes accessed
+    coll_bytes: float          # per-device ICI bytes
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float   # 6ND-style useful flops (whole job)
+    useful_ratio: float        # model_flops / (hlo flops * chips)
+    n_devices: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, n_devices: int, model_flops_total: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll, breakdown = collective_bytes(compiled.as_text(), n_devices)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_total / max(flops * n_devices, 1.0)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll, coll_breakdown=breakdown,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck, model_flops_total=model_flops_total,
+        useful_ratio=useful, n_devices=n_devices,
+    )
+
+
+def model_flops(cfg, cell, n_params_nonembed: int) -> float:
+    """6ND for training, 2ND for single forward (prefill; the vocab head
+    runs on the last position only), 2N*B per decoded token.  MoE uses
+    active params (top_k/n_experts of expert weights)."""
+    n = n_params_nonembed
+    head = 0 if cfg.family == "audio" else cfg.vocab * cfg.d_model
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.family == "audio":
+            tokens = cell.global_batch * (cell.seq_len + cell.seq_len // 8)
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        body = 2.0 * (n - head) * cell.global_batch * cell.seq_len
+        return body + 2.0 * head * cell.global_batch
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def active_params(cfg, params_abs) -> int:
+    """Matmul-active parameter count: excludes embeddings; scales expert
+    weights by top_k/n_experts; counts the lm_head."""
+    import jax
+
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_abs)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        if name.endswith("embed") and not cfg.tie_embeddings:
+            continue
+        if name.endswith("embed") and cfg.tie_embeddings:
+            pass  # used as the head matmul
+        if "moe/" in name and ("gate" in name or "up" in name or "down" in name):
+            size = size * cfg.top_k // max(cfg.n_experts, 1)
+        total += size
+    return total

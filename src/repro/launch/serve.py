@@ -1,0 +1,103 @@
+"""Serving launcher: batched decode for any --arch, or the paper's
+streaming Spartus engine for the LSTM AM.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --batch 4 --steps 32
+    PYTHONPATH=src python -m repro.launch.serve --spartus --theta 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import api
+
+
+def serve_arch(args):
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = api.init_params(cfg, jax.random.key(0))
+    cache = api.init_cache(cfg, args.batch, args.ctx)
+    step = jax.jit(lambda p, c, t: api.serve_step(p, cfg, t, c))
+
+    if cfg.family == "vlm":
+        inputs = jax.random.normal(jax.random.key(1),
+                                   (args.batch, 1, cfg.d_model))
+    else:
+        inputs = jnp.zeros((args.batch, 1), jnp.int32)
+
+    logits, cache = step(params, cache, inputs)  # compile
+    jax.block_until_ready(logits)
+    t0 = time.time()
+    toks = inputs
+    for i in range(args.steps):
+        logits, cache = step(params, cache, toks)
+        if cfg.family != "vlm":
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = (time.time() - t0) / args.steps
+    print(f"[serve] {cfg.name}: {args.steps} steps batch={args.batch} "
+          f"-> {dt*1e3:.2f} ms/token ({args.batch/dt:.1f} tok/s)")
+
+
+def serve_spartus(args):
+    from repro.data.speech import SpeechConfig, SpeechDataset
+    from repro.models import lstm_am
+    from repro.serving.engine import EngineConfig, SpartusEngine
+    from repro.training.trainer import TrainConfig, pretrain_retrain
+    from repro.training.optimizer import AdamWConfig
+
+    cfg = TrainConfig(
+        model=lstm_am.LSTMAMConfig(input_dim=123, hidden_dim=args.hidden,
+                                   n_layers=2, n_classes=41),
+        data=SpeechConfig(max_frames=64),
+        opt=AdamWConfig(lr=3e-3), batch_size=8, steps_per_epoch=15,
+        cbtd_gamma=args.gamma, cbtd_m=8, cbtd_delta_alpha=0.5,
+    )
+    print("[serve] training a small CBTD+DeltaLSTM AM first ...")
+    pre, post, rcfg = pretrain_retrain(cfg, 2, 1, theta=args.theta)
+    engine = SpartusEngine(post.params, rcfg.model,
+                           EngineConfig(theta=args.theta, gamma=args.gamma,
+                                        m=8))
+    feats, *_ = next(SpeechDataset(cfg.data, 1))
+    t0 = time.time()
+    logits = engine.run_utterance(feats[0])
+    dt = time.time() - t0
+    sp = engine.measured_sparsity()
+    print(f"[serve] streamed {feats.shape[1]} frames in {dt:.2f}s; "
+          f"temporal sparsity {sp['temporal_sparsity']:.1%}, "
+          f"weight sparsity {engine.weight_sparsity():.1%}, "
+          f"overflow {sp['capacity_overflow_rate']:.1%}")
+    from repro.hwsim import spartus_model as hw
+    rep = hw.evaluate(hw.SPARTUS, hw.TEST_LAYER, args.gamma,
+                      sp["temporal_sparsity"], 0.75)
+    print(f"[serve] modelled Spartus latency for the paper's test layer at "
+          f"this sparsity: {rep.latency_us:.2f} us "
+          f"({rep.batch1_throughput_gops:.0f} GOp/s effective)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--spartus", action="store_true")
+    ap.add_argument("--theta", type=float, default=0.2)
+    ap.add_argument("--gamma", type=float, default=0.75)
+    ap.add_argument("--hidden", type=int, default=64)
+    args = ap.parse_args()
+    if args.spartus:
+        serve_spartus(args)
+    else:
+        serve_arch(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Distributed train/serve step builders — the functions the dry-run
+lowers and the launchers execute.
+
+``q_chunk`` auto-selects for long sequences so 32k prefill never builds an
+[S, S] score tile; training always uses per-layer remat (scan-over-layers
+checkpointing) — the standard memory policy at these shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ArchConfig, ShapeCell
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def pick_q_chunk(seq_len: int) -> int:
+    if seq_len >= 32768:
+        return 512
+    if seq_len >= 4096:
+        return 1024
+    return 0
+
+
+import os
+
+
+def pick_microbatches(cfg: ArchConfig, cell) -> int:
+    """Gradient-accumulation factor: bound per-device activation memory.
+
+    Base heuristic: one microbatch per ~2 GiB of (layers x B x S x d) bf16
+    checkpoint volume at 256-way sharding.  Family factors account for
+    state that the residual-checkpoint estimate misses: fp32 recurrence
+    coefficients under associative_scan (hybrid), encoder+decoder dual
+    stacks with cross-attention (audio), dispatch buffers (moe) —
+    calibrated against measured compile peaks (EXPERIMENTS.md §Dry-run)."""
+    if os.environ.get("REPRO_MICROBATCHES"):
+        return int(os.environ["REPRO_MICROBATCHES"])
+    # audio: encoder activations + cross-attention scores all scale with
+    # the (huge) frame sequence — measured 25.9 GiB at n_mb=1, 6.2 at 8
+    factor = {"hybrid": 4.0, "audio": 64.0, "moe": 16.0}.get(cfg.family, 1.0)
+    ckpt_bytes = (2 * cfg.n_layers * cell.global_batch * cell.seq_len
+                  * cfg.d_model * factor)
+    per_dev = ckpt_bytes / 256
+    n_mb = 1
+    while per_dev / n_mb > 2 * 1024**3 and n_mb < cell.global_batch:
+        n_mb *= 2
+    return n_mb
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, seq_len: int,
+                    remat: bool = True, microbatches: int = 1):
+    q_chunk = pick_q_chunk(seq_len)
+
+    def loss_fn(params, batch):
+        return api.train_loss(params, cfg, batch, q_chunk=q_chunk, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape((microbatches, b // microbatches)
+                                    + leaf.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def mb_body(acc, mb):
+                loss_acc, g_acc = acc
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                mb_body, (jnp.zeros((), jnp.float32), zeros), mbs
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def _is_weight(leaf) -> bool:
+    return (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def quantize_params_abstract(params_abs):
+    """Abstract int8 serving tree: {'q': int8 weights (+passthrough),
+    'scales': per-weight scalar}.  Mirrors serving/engine.py's int8 export
+    for the dense TPU path (perf variant int8_weights)."""
+    q = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.int8) if _is_weight(l) else l,
+        params_abs,
+    )
+    scales = jax.tree.map(
+        lambda l: (jax.ShapeDtypeStruct((), jnp.float32) if _is_weight(l)
+                   else jax.ShapeDtypeStruct((0,), jnp.float32)),
+        params_abs,
+    )
+    return {"q": q, "scales": scales}
+
+
+def dequantize_params(pq, dtype=jnp.bfloat16):
+    def one(q, s):
+        if q.dtype == jnp.int8:
+            return q.astype(dtype) * s.astype(dtype)
+        return q
+
+    return jax.tree.map(one, pq["q"], pq["scales"])
+
+
+def make_serve_step(cfg: ArchConfig):
+    from repro import perf
+
+    if perf.current().int8_weights:
+        def serve_step(pq, cache, inputs):
+            params = dequantize_params(pq)
+            logits, cache = api.serve_step(params, cfg, inputs, cache)
+            return logits, cache
+    else:
+        def serve_step(params, cache, inputs):
+            logits, cache = api.serve_step(params, cfg, inputs, cache)
+            return logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, seq_len: int):
+    q_chunk = pick_q_chunk(seq_len)
+
+    def prefill_step(params, inputs):
+        return api.prefill(params, cfg, inputs, q_chunk=q_chunk)
+
+    return prefill_step
+
+
+# -- abstract state builders (dry-run: no allocation) --------------------------
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.key(0), dtype)
+    )
+
+
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(adamw_init, params_abs)
+
+
+def abstract_cache(cfg: ArchConfig, cell: ShapeCell, dtype=jnp.bfloat16):
+    s_cache = cell.seq_len if cell.kind == "decode" else cell.seq_len
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, cell.global_batch, s_cache, dtype)
+    )
+
+
+def n_params_of(tree_abs) -> int:
+    return sum(int(jnp.prod(jnp.array(l.shape))) if l.shape else 1
+               for l in jax.tree.leaves(tree_abs))

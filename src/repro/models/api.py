@@ -1,0 +1,218 @@
+"""Unified model API over every assigned architecture.
+
+    init_params(cfg, key, dtype)            -> params pytree
+    train_loss(params, cfg, batch, ...)     -> scalar CE loss
+    init_cache(cfg, batch, s_cache, dtype)  -> decode cache pytree
+    serve_step(params, cfg, inputs, cache)  -> (logits, new cache)
+    input_specs(cfg, cell)                  -> ShapeDtypeStructs for dry-run
+
+The paper's technique hooks in at two points:
+  * ``cbtd_layout(cfg)`` — CBTD pruning patterns for every linear in the
+    arch (used by the trainer and the pruning benchmarks);
+  * serving engines may wrap time-distributed projections in DeltaLinear
+    (serving/engine.py) where ``cfg.delta_applicable``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeCell
+from repro.models import encdec, mamba2, rglru, transformer
+from repro.models.transformer import ce_loss
+
+DEC_TRAIN_FRAC = 8  # enc-dec: decoder length = seq_len / 8 in train cells
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_params(key, cfg, dtype)
+    if cfg.family == "ssm":
+        return mamba2.init_params(key, cfg, dtype)
+    if cfg.family == "hybrid":
+        return rglru.init_params(key, cfg, dtype)
+    if cfg.family == "audio":
+        return encdec.init_params(key, cfg, dtype)
+    raise ValueError(cfg.family)
+
+
+def train_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+               *, q_chunk: int = 0, remat: bool = False) -> jax.Array:
+    """batch keys by family:
+      dense/moe/ssm/hybrid: tokens, targets
+      vlm:                  inputs_embeds, targets
+      audio:                frames, dec_tokens, dec_targets
+    """
+    from repro.models.transformer import chunked_ce_loss, head_weight
+
+    if cfg.family in ("dense", "moe"):
+        x = transformer.forward_hidden(params, cfg, batch["tokens"],
+                                       q_chunk=q_chunk, remat=remat)
+        return chunked_ce_loss(x, head_weight(params, cfg), batch["targets"])
+    if cfg.family == "vlm":
+        x = transformer.forward_hidden(params, cfg, None,
+                                       inputs_embeds=batch["inputs_embeds"],
+                                       q_chunk=q_chunk, remat=remat)
+        return chunked_ce_loss(x, head_weight(params, cfg), batch["targets"])
+    if cfg.family == "ssm":
+        x = mamba2.forward_hidden(params, cfg, batch["tokens"], remat=remat)
+        return chunked_ce_loss(x, params["lm_head"]["w"], batch["targets"])
+    if cfg.family == "hybrid":
+        x = rglru.forward_hidden(params, cfg, batch["tokens"],
+                                 q_chunk=q_chunk, remat=remat)
+        return chunked_ce_loss(x, params["lm_head"]["w"], batch["targets"])
+    if cfg.family == "audio":
+        enc_out = encdec.encode(params, cfg, batch["frames"],
+                                q_chunk=q_chunk, remat=remat)
+        x = encdec.decode_train_hidden(params, cfg, batch["dec_tokens"],
+                                       enc_out, q_chunk=q_chunk, remat=remat)
+        return chunked_ce_loss(x, params["lm_head"]["w"], batch["dec_targets"])
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int, dtype=jnp.float32):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_cache(cfg, batch, s_cache, dtype)
+    if cfg.family == "ssm":
+        return mamba2.init_cache(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        return rglru.init_cache(cfg, batch, dtype)
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, s_cache, dtype)
+    raise ValueError(cfg.family)
+
+
+def serve_step(params, cfg: ArchConfig, inputs, cache):
+    """One decode step.  ``inputs``: tokens [B,1] (or embeds [B,1,d] for vlm)."""
+    if cfg.family in ("dense", "moe"):
+        return transformer.decode_step(params, cfg, inputs, cache)
+    if cfg.family == "vlm":
+        return transformer.decode_step(params, cfg, None, cache,
+                                       inputs_embeds=inputs)
+    if cfg.family == "ssm":
+        return mamba2.decode_step(params, cfg, inputs, cache)
+    if cfg.family == "hybrid":
+        return rglru.decode_step(params, cfg, inputs, cache)
+    if cfg.family == "audio":
+        return encdec.decode_step(params, cfg, inputs, cache)
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ArchConfig, inputs, *, q_chunk: int = 0):
+    """Full-sequence forward — the prefill_32k workload.  Returns the
+    LAST-position logits [B, 1, V] (what a serving system samples from;
+    full [B, S, V] logits at a 49k non-16-divisible vocab replicated
+    14 GiB/device on granite-moe — EXPERIMENTS.md §Dry-run).  For the
+    enc-dec arch this is encoder forward + cross-KV build."""
+    def last_logits(x, head_w):
+        return x[:, -1:, :] @ head_w.T
+
+    if cfg.family in ("dense", "moe"):
+        x = transformer.forward_hidden(params, cfg, inputs, q_chunk=q_chunk)
+        return last_logits(x, transformer.head_weight(params, cfg))
+    if cfg.family == "vlm":
+        x = transformer.forward_hidden(params, cfg, None, inputs_embeds=inputs,
+                                       q_chunk=q_chunk)
+        return last_logits(x, transformer.head_weight(params, cfg))
+    if cfg.family == "ssm":
+        x = mamba2.forward_hidden(params, cfg, inputs)
+        return last_logits(x, params["lm_head"]["w"])
+    if cfg.family == "hybrid":
+        x = rglru.forward_hidden(params, cfg, inputs, q_chunk=q_chunk)
+        return last_logits(x, params["lm_head"]["w"])
+    if cfg.family == "audio":
+        enc_out = encdec.encode(params, cfg, inputs, q_chunk=q_chunk)
+        return encdec.build_cross_cache(params, cfg, enc_out)
+    raise ValueError(cfg.family)
+
+
+# -- dry-run input specs -----------------------------------------------------
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell
+    (weak-type-correct, shardable, no allocation)."""
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind in ("train",):
+        if cfg.family == "vlm":
+            return {
+                "inputs_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "audio":
+            s_dec = s // DEC_TRAIN_FRAC
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                "dec_tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+                "dec_targets": jax.ShapeDtypeStruct((b, s_dec), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if cell.kind == "prefill":
+        if cfg.family in ("vlm", "audio"):
+            return {"inputs": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+        return {"inputs": jax.ShapeDtypeStruct((b, s), i32)}
+    if cell.kind == "decode":
+        if cfg.family == "vlm":
+            return {"inputs": jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)}
+        return {"inputs": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(cell.kind)
+
+
+def make_train_batch(cfg: ArchConfig, key: jax.Array, batch: int, seq: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Materialised random batch matching input_specs (smoke tests/examples)."""
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "vlm":
+        return {
+            "inputs_embeds": jax.random.normal(k1, (batch, seq, cfg.d_model), dtype),
+            "targets": jax.random.randint(k2, (batch, seq), 0, cfg.vocab),
+        }
+    if cfg.family == "audio":
+        s_dec = max(seq // DEC_TRAIN_FRAC, 4)
+        return {
+            "frames": jax.random.normal(k1, (batch, seq, cfg.d_model), dtype),
+            "dec_tokens": jax.random.randint(k2, (batch, s_dec), 0, cfg.vocab),
+            "dec_targets": jax.random.randint(k2, (batch, s_dec), 0, cfg.vocab),
+        }
+    toks = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def cbtd_layout(cfg: ArchConfig, gamma: float = 0.94, m: int = 64):
+    """CBTD patterns covering every prunable linear of the arch (embeddings,
+    norms and the logit/lm head excluded, per the paper's practice)."""
+    from repro.core.cbtd import CBTDConfig
+
+    c = CBTDConfig(gamma=gamma, m=m)
+    pats = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        pats.update({"attn/q/w": c, "attn/k/w": c, "attn/v/w": c, "attn/o/w": c})
+        if cfg.family == "moe":
+            pats.update({"moe/gate": c, "moe/up": c, "moe/down": c})
+        else:
+            pats.update({"mlp/gate/w": c, "mlp/up/w": c, "mlp/down/w": c})
+    elif cfg.family == "ssm":
+        pats.update({"in_proj/w": c, "out_proj/w": c})
+    elif cfg.family == "hybrid":
+        pats.update({
+            "attn/q/w": c, "attn/k/w": c, "attn/v/w": c, "attn/o/w": c,
+            "rglru/in_x/w": c, "rglru/in_y/w": c, "rglru/out/w": c,
+            "rglru/gate_a/w": c, "rglru/gate_i/w": c,
+            "mlp/gate/w": c, "mlp/up/w": c, "mlp/down/w": c,
+        })
+    elif cfg.family == "audio":
+        pats.update({
+            "attn/q/w": c, "attn/k/w": c, "attn/v/w": c, "attn/o/w": c,
+            "self_attn/q/w": c, "self_attn/k/w": c, "self_attn/v/w": c,
+            "self_attn/o/w": c, "cross_attn/q/w": c, "cross_attn/k/w": c,
+            "cross_attn/v/w": c, "cross_attn/o/w": c,
+            "mlp/gate/w": c, "mlp/up/w": c, "mlp/down/w": c,
+        })
+    return pats

@@ -1,0 +1,381 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Conventions:
+  * linear weights are stored ``[out, in]`` (y = x @ w.T) — the same
+    [column-height, column] orientation as the paper's stacked matrices,
+    so CBTD/CBCSC apply to every linear in the zoo unchanged;
+  * attention is grouped-query with optional QKV bias (qwen2), QK-norm
+    (qwen3), sliding window (recurrentgemma), and q-chunked streaming
+    softmax so 32k prefill never materialises an [S, S] score matrix;
+  * all sequence layers take/return [B, S, ...]; decode-step variants take
+    a cache pytree and a scalar position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# -- init -------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_out, d_in), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].T
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, base: float = 1e6) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+def _expand_gqa(k: jax.Array, hq: int) -> jax.Array:
+    """[B, S, Hkv, hd] -> [B, S, Hq, hd] by repeating each kv head G times.
+
+    GQA is evaluated in expanded-head MHA form so the head axis stays
+    TP-shardable (a [Hkv, G] reshape of a sharded head dim would force XLA
+    to reshard; a repeat of replicated kv heads does not)."""
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+def _attn_block(
+    q: jax.Array,          # [B, Sq, H, hd]
+    k: jax.Array,          # [B, Skv, H, hd]  (GQA pre-expanded)
+    v: jax.Array,          # [B, Skv, H, hd]
+    q_pos: jax.Array,      # [Sq] absolute positions of the q rows
+    kv_pos: jax.Array,     # [Skv]
+    causal: bool,
+    window: int,
+    kv_len: Optional[jax.Array],  # mask kv_pos >= kv_len (decode)
+    apply_hints: bool = True,     # decode paths pre-constrain their layout
+) -> jax.Array:
+    from repro.distributed import hints
+
+    hd = q.shape[-1]
+    if apply_hints:
+        q, k, v = hints.shard_attn(q, k, v)
+    scores = jnp.einsum(
+        "bqhd,bthd->bhqt", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        mask &= kv_pos[None, :] < kv_len
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,          # [B, Sq, Hq, hd]
+    k: jax.Array,          # [B, Skv, Hkv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """GQA attention.  With ``q_chunk``, scans over query blocks so peak
+    memory is O(Sq/nc * Skv) — required for the 32k shapes."""
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    k = _expand_gqa(k, hq)
+    v = _expand_gqa(v, hq)
+    kv_pos = jnp.arange(skv)
+
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0:
+        nc = sq // q_chunk
+        qs = q.reshape(b, nc, q_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+
+        def body(_, inp):
+            ci, qblk = inp
+            q_pos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+            if window and skv > window + q_chunk:
+                # local attention: only the [start, start+w+qc) kv slab matters
+                span = window + q_chunk
+                start = jnp.clip(ci * q_chunk + q_offset - window, 0, skv - span)
+                kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+                vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+                kp = start + jnp.arange(span)
+                out = _attn_block(qblk, kb, vb, q_pos, kp, causal, window, kv_len)
+            else:
+                out = _attn_block(qblk, k, v, q_pos, kv_pos, causal, window, kv_len)
+            return None, out
+
+        from repro.models.scan import scan_layers
+        # checkpoint each q-chunk: backward recomputes one chunk's scores
+        # instead of stashing [B, H, qc, Skv] fp32 probs per chunk
+        body = jax.checkpoint(body, prevent_cse=False)
+        _, outs = scan_layers(body, None, (jnp.arange(nc), qs))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, hd)
+
+    q_pos = q_offset + jnp.arange(sq)
+    return _attn_block(q, k, v, q_pos, kv_pos, causal, window, kv_len)
+
+
+# -- attention module (params + cache) ---------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, hd: int,
+                   qkv_bias: bool, qk_norm: bool, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": init_linear(ks[0], d_model, n_heads * hd, qkv_bias, dtype),
+        "k": init_linear(ks[1], d_model, n_kv_heads * hd, qkv_bias, dtype),
+        "v": init_linear(ks[2], d_model, n_kv_heads * hd, qkv_bias, dtype),
+        "o": init_linear(ks[3], n_heads * hd, d_model, False, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def attention_forward(
+    p: Params, x: jax.Array, *, n_heads: int, n_kv_heads: int, hd: int,
+    causal: bool = True, window: int = 0, q_chunk: int = 0,
+    rope_base: float = 1e6, positions: Optional[jax.Array] = None,
+    kv_x: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Self-attention (or cross-attention when kv_x is given) over [B,S,d]."""
+    b, s, _ = x.shape
+    src = kv_x if kv_x is not None else x
+    skv = src.shape[1]
+    q = linear(p["q"], x).reshape(b, s, n_heads, hd)
+    k = linear(p["k"], src).reshape(b, skv, n_kv_heads, hd)
+    v = linear(p["v"], src).reshape(b, skv, n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if kv_x is None:  # RoPE only for self-attention
+        pos = positions if positions is not None else jnp.arange(s)
+        q = rope(q, jnp.broadcast_to(pos, (s,)), rope_base)
+        k = rope(k, jnp.arange(skv), rope_base)
+    out = attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    return linear(p["o"], out.reshape(b, s, n_heads * hd))
+
+
+def attention_decode_step(
+    p: Params, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array,
+    *, n_heads: int, n_kv_heads: int, hd: int, window: int = 0,
+    rope_base: float = 1e6,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. x: [B, 1, d]; cache: {k,v: [B, S_cache, Hkv, hd]}.
+    For windowed attention the cache is a ring buffer of size window."""
+    b = x.shape[0]
+    s_cache = cache["k"].shape[1]
+    q = linear(p["q"], x).reshape(b, 1, n_heads, hd)
+    k = linear(p["k"], x).reshape(b, 1, n_kv_heads, hd)
+    v = linear(p["v"], x).reshape(b, 1, n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    q = rope(q, pos[None], rope_base)
+    k = rope(k, pos[None], rope_base)
+
+    slot = pos % s_cache if window else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    from repro.distributed import hints
+
+    ke = _expand_gqa(new_k, n_heads)
+    ve = _expand_gqa(new_v, n_heads)
+    q, ke, ve = hints.shard_attn_decode(q, ke, ve, n_kv_heads)
+    if window:
+        # ring buffer: recover absolute positions of each slot to mask
+        kv_pos = jnp.arange(s_cache)
+        ring_pos = jnp.where(
+            kv_pos <= slot, pos - slot + kv_pos, pos - slot - s_cache + kv_pos
+        )
+        valid = ring_pos >= jnp.maximum(pos - window + 1, 0)
+        scores = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                            ke.astype(jnp.float32)) * (hd ** -0.5)
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqt,bthd->bqhd", probs, ve.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        out = _attn_block(q, ke, ve, pos[None], jnp.arange(s_cache),
+                          causal=False, window=0, kv_len=pos + 1,
+                          apply_hints=False)
+    y = linear(p["o"], out.reshape(b, 1, n_heads * hd))
+    return y, {"k": new_k, "v": new_v}
+
+
+def init_kv_cache(batch: int, s_cache: int, n_kv_heads: int, hd: int,
+                  dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, s_cache, n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, s_cache, n_kv_heads, hd), dtype),
+    }
+
+
+# -- MLP ----------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(ks[0], d_model, d_ff, False, dtype),
+        "up": init_linear(ks[1], d_model, d_ff, False, dtype),
+        "down": init_linear(ks[2], d_ff, d_model, False, dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+# -- MoE ------------------------------------------------------------------------
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "router": init_linear(ks[0], d_model, n_experts, False, dtype),
+        "gate": jax.random.normal(ks[1], (n_experts, d_ff, d_model), dtype) * s_in,
+        "up": jax.random.normal(ks[2], (n_experts, d_ff, d_model), dtype) * s_in,
+        "down": jax.random.normal(ks[3], (n_experts, d_model, d_ff), dtype) * s_ff,
+    }
+
+
+def moe_forward(p: Params, x: jax.Array, *, top_k: int,
+                capacity_factor: float = 1.25) -> jax.Array:
+    """Top-k token-choice MoE with static per-row capacity.
+
+    Dispatch is sort-based and vmapped over the batch rows so the scatter/
+    gather stay batch-sharded under pjit; the [B, E, C, d] dispatch buffer
+    is annotated (batch x expert) so XLA lowers the dispatch to the
+    canonical expert-parallel all-to-all (DESIGN.md §5).  Overflow beyond
+    capacity drops tokens (standard Switch semantics)."""
+    from repro.distributed import hints
+
+    b, s, d = x.shape
+    e = p["router"]["w"].shape[0]
+
+    # long sequences dispatch in sequence blocks: per-(row, block) sort +
+    # capacity keeps scatter/gather buffers bounded (32k prefill would
+    # otherwise build multi-GiB per-device dispatch intermediates).  The
+    # batch-major reshape keeps the fused (B*nb) dim batch-sharded.
+    block = 2048
+    if s > block and s % block == 0:
+        nb = s // block
+        xb = x.reshape(b * nb, block, d)
+        # the merge of (batch-sharded b) x (seq-sharded nb) is not
+        # representable — pin the fused dim to batch sharding explicitly
+        # (without this, multi-pod prefill replicated the dispatch:
+        # 128 GiB/device on olmoe, EXPERIMENTS.md §Dry-run)
+        xb = hints.constrain(xb, "batch", None, None)
+        yb = moe_forward(p, xb, top_k=top_k, capacity_factor=capacity_factor)
+        yb = hints.constrain(yb, "batch", None, None)
+        return yb.reshape(b, s, d)
+
+    cap = int(max(1, round(s * top_k / e * capacity_factor)))
+
+    logits = linear(p["router"], x.astype(jnp.float32))              # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, top_k)                    # [B, S, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    def routing_row(eids_r):
+        """eids_r: [S, K] -> (dest [S*K], keep, token_of) via a stable sort
+        by expert id; rank within the expert's segment is the capacity slot."""
+        flat_e = eids_r.reshape(-1)                                  # [S*K]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos = jnp.arange(s * top_k) - seg_start
+        dest = sorted_e * cap + pos
+        keep = pos < cap
+        token_of = order // top_k
+        return order, dest, keep, token_of
+
+    def dispatch_row(xr, eids_r):
+        _, dest, keep, token_of = routing_row(eids_r)
+        buf = jnp.zeros((e * cap, d), xr.dtype)
+        buf = buf.at[jnp.where(keep, dest, e * cap)].set(
+            xr[token_of], mode="drop"
+        )
+        return buf.reshape(e, cap, d)
+
+    buf = jax.vmap(dispatch_row)(x, eids)                            # [B,E,C,d]
+    buf = hints.constrain(buf, "batch", "model", None, None)
+
+    act = jax.nn.silu(jnp.einsum("becd,efd->becf", buf, p["gate"])) * jnp.einsum(
+        "becd,efd->becf", buf, p["up"]
+    )
+    o = jnp.einsum("becf,edf->becd", act, p["down"])
+    o = hints.constrain(o, "batch", "model", None, None)
+    o = o.reshape(b, e * cap, d)
+
+    def combine_row(o_r, eids_r, gate_r):
+        order, dest, keep, token_of = routing_row(eids_r)
+        gathered = jnp.where(keep[:, None], o_r[jnp.where(keep, dest, 0)], 0.0)
+        weighted = gathered * gate_r.reshape(-1)[order][:, None].astype(o_r.dtype)
+        return jnp.zeros((s, d), o_r.dtype).at[token_of].add(weighted)
+
+    return jax.vmap(combine_row)(o, eids, gate_vals)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, top_k: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style f*P)."""
+    b, s, d = x.shape
+    e = p["router"]["w"].shape[0]
+    logits = linear(p["router"], x.reshape(-1, d).astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eids = jax.lax.top_k(probs, top_k)
+    f = jnp.mean(jax.nn.one_hot(eids, e), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=0)
+    return e * jnp.sum(f * pmean)

@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Chunked SSD: within a chunk the recurrence is evaluated as a masked
+matmul (MXU-friendly "dual" attention form); chunk-boundary states are
+carried by a short ``lax.scan``.  All decays stay in log space and are
+<= 0, so every exp() is bounded by 1.
+
+The SSD recurrence itself is elementwise-gated (no W·h matmul), so the
+paper's *recurrent* delta trick does not apply to the state update —
+DeltaLinear applies to the time-distributed projections instead
+(DESIGN.md §4: Arch-applicability).
+
+Decode carries (conv ring state, SSD state [B, H, P, N]) per layer —
+O(1) in sequence length, which is why this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models.scan import scan_layers
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + n_heads
+    # A init in [1, 16) (log-uniform), dt bias via inverse softplus of ~0.01-0.1
+    a = jnp.exp(jax.random.uniform(k3, (n_heads,), jnp.float32,
+                                   jnp.log(1.0), jnp.log(16.0)))
+    dt = jnp.exp(jax.random.uniform(k4, (n_heads,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "in_proj": L.init_linear(k1, cfg.d_model, d_in_proj, False, dtype),
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gated_norm": L.init_rmsnorm(d_inner, dtype),
+        "out_proj": L.init_linear(k5, d_inner, cfg.d_model, False, dtype),
+    }
+
+
+def pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of ``s`` that is <= chunk (SSD needs chunk | S)."""
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    return chunk
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # window sum: sum_j w[j] * x[t - (K-1) + j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + pad[:, j : j + x.shape[1], :] * w[j]
+    return out + b
+
+
+def ssd_chunked(
+    x: jax.Array,     # [B, S, H, P]
+    dt: jax.Array,    # [B, S, H] (post-softplus)
+    a: jax.Array,     # [H] (negative)
+    b_in: jax.Array,  # [B, S, N]
+    c_in: jax.Array,  # [B, S, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = pick_chunk(s, chunk)
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a                                    # [b,nc,l,h], <= 0
+    l_cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk ("attention" dual form)
+    diff = l_cum[:, :, :, None, :] - l_cum[:, :, None, :, :]   # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]          # [b,nc,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # chunk-boundary states
+    decay_to_end = jnp.exp(l_cum[:, :, -1:, :] - l_cum)        # [b,nc,l,h]
+    z = jnp.einsum("bclh,bclhp,bcln->bchpn", decay_to_end * dtc, xc, bc)
+    chunk_decay = jnp.exp(l_cum[:, :, -1, :])                  # [b,nc,h]
+
+    def step(state, inp):
+        z_c, cd_c = inp                                        # [b,h,p,n],[b,h]
+        new = cd_c[..., None, None] * state + z_c
+        return new, state                                      # emit state at chunk START
+
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    final, s_starts = scan_layers(
+        step, s0, (z.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)               # [b,nc,h,p,n]
+
+    y_cross = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", cc, s_starts, jnp.exp(l_cum)
+    )
+    y = (y_intra + y_cross).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def block_forward(lp: Params, cfg: ArchConfig, x: jax.Array,
+                  chunk: int = 128) -> jax.Array:
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz, s, _ = x.shape
+    zxbcdt = L.linear(lp["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]
+    xbc = jax.nn.silu(causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
+    xs = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner : d_inner + cfg.ssm_state]
+    c_in = xbc[..., d_inner + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+    xh = xs.reshape(bsz, s, n_heads, cfg.ssm_head_dim)
+    y, _ = ssd_chunked(xh, dt, a, b_in, c_in, chunk)
+    y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, d_inner)
+    y = L.rms_norm(lp["gated_norm"], y * jax.nn.silu(z))
+    return L.linear(lp["out_proj"], y)
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": L.init_linear(kh, cfg.d_model, cfg.vocab, False, dtype),
+    }
+
+
+def forward_hidden(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                   *, chunk: int = 128, remat: bool = False) -> jax.Array:
+    x = params["embed"][tokens]
+
+    def body(carry, lp):
+        from repro.distributed import hints
+        h = block_forward(lp, cfg, L.rms_norm(lp["norm"], carry), chunk)
+        return hints.constrain(carry + h, "batch", "model", None), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = scan_layers(body, x, params["layers"])
+    return L.rms_norm(params["final_norm"], x)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            *, chunk: int = 128, remat: bool = False) -> jax.Array:
+    x = forward_hidden(params, cfg, tokens, chunk=chunk, remat=remat)
+    return x @ params["lm_head"]["w"].T
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros(
+            (cfg.n_layers, batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array, cache):
+    """tokens: [B, 1] -> (logits [B, 1, V], new cache)."""
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    x = params["embed"][tokens]                                  # [B,1,d]
+
+    def body(carry, scanned):
+        lp, conv_st, ssd_st = scanned
+        xx = carry
+        u = L.rms_norm(lp["norm"], xx)[:, 0]                     # [B,d]
+        zxbcdt = L.linear(lp["in_proj"], u)
+        z = zxbcdt[..., :d_inner]
+        xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+        dt_raw = zxbcdt[..., d_inner + conv_dim :]
+        # conv ring state: window = [conv_st, xbc]
+        win = jnp.concatenate([conv_st, xbc[:, None, :]], axis=1)  # [B,K,conv]
+        conv_out = jnp.einsum("bkc,kc->bc", win, lp["conv_w"]) + lp["conv_b"]
+        xbc_t = jax.nn.silu(conv_out)
+        new_conv = win[:, 1:, :]
+        xs = xbc_t[..., :d_inner]
+        b_in = xbc_t[..., d_inner : d_inner + cfg.ssm_state]
+        c_in = xbc_t[..., d_inner + cfg.ssm_state :]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])  # [B,H]
+        a = -jnp.exp(lp["a_log"])
+        xh = xs.reshape(-1, n_heads, cfg.ssm_head_dim).astype(jnp.float32)
+        decay = jnp.exp(dt * a)                                  # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b_in.astype(jnp.float32))
+        new_ssd = decay[..., None, None] * ssd_st + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_ssd, c_in.astype(jnp.float32))
+        y = y + lp["d_skip"][None, :, None] * xh
+        y = y.reshape(-1, d_inner).astype(xx.dtype)
+        y = L.rms_norm(lp["gated_norm"], y * jax.nn.silu(z))
+        out = L.linear(lp["out_proj"], y)[:, None, :]
+        return xx + out, (new_conv, new_ssd)
+
+    x, (new_conv, new_ssd) = scan_layers(
+        body, x, (params["layers"], cache["conv"], cache["ssd"])
+    )
+    x = L.rms_norm(params["final_norm"], x)
+    logits = x @ params["lm_head"]["w"].T
+    return logits, {"conv": new_conv, "ssd": new_ssd, "pos": cache["pos"] + 1}

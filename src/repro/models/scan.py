@@ -1,0 +1,50 @@
+"""Layer-stack execution: lax.scan by default, python-unrolled on demand.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so flops/bytes of
+scanned layer stacks are undercounted by ~n_layers (measured; see
+EXPERIMENTS.md §Dry-run methodology).  The dry-run therefore compiles a
+reduced-depth *unrolled* probe (1 and 2 stacks) and extrapolates exact
+per-layer costs, while the full scanned compile proves sharding coherence
+and memory fit.  ``unrolled()`` is the context flag the probe sets.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled(enable: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = enable
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def unroll_active() -> bool:
+    return _UNROLL
+
+
+def scan_layers(body: Callable, carry, xs) -> Tuple[Any, Any]:
+    """drop-in for ``jax.lax.scan(body, carry, xs)`` over layer stacks."""
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,196 @@
+"""Decoder-only transformer LM (dense + MoE) — covers qwen2/qwen3/
+granite-34b/internlm2/pixtral-backbone/granite-moe/olmoe.
+
+Layers are stacked along a leading L axis and executed with
+``jax.lax.scan`` (small HLO, fast multi-arch dry-run compiles) with an
+optional remat policy for training.  Decode steps scan over (layer params,
+layer KV cache) pairs and emit the updated stacked cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models.scan import scan_layers
+
+Params = Dict[str, Any]
+
+
+def init_layer(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.qkv_bias, cfg.qk_norm, dtype,
+        ),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+    else:
+        p["mlp"] = L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab, False, dtype)
+    return params
+
+
+def _layer_fwd(lp: Params, x: jax.Array, cfg: ArchConfig, q_chunk: int) -> jax.Array:
+    h = L.attention_forward(
+        lp["attn"], L.rms_norm(lp["attn_norm"], x),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+        causal=True, window=cfg.attn_window, q_chunk=q_chunk,
+    )
+    x = x + h
+    y = L.rms_norm(lp["mlp_norm"], x)
+    if cfg.family == "moe":
+        h2 = L.moe_forward(
+            lp["moe"], y, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor
+        )
+    else:
+        h2 = L.swiglu(lp["mlp"], y)
+    from repro.distributed import hints
+    # sequence-shard the residual checkpoint: the scan stores one carry per
+    # layer for backward — at 88 layers x [B,4k,6k] that is the difference
+    # between 200 GiB and 13 GiB per device (Megatron-style SP).
+    return hints.constrain(x + h2, "batch", "model", None)
+
+
+def head_weight(params: Params, cfg: ArchConfig) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"]
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array] = None,
+    inputs_embeds: Optional[jax.Array] = None,
+    *,
+    q_chunk: int = 0,
+    remat: bool = False,
+) -> jax.Array:
+    """Full-sequence forward -> final hidden states [B, S, d]."""
+    x = params["embed"][tokens] if inputs_embeds is None else inputs_embeds
+
+    def body(carry, lp):
+        return _layer_fwd(lp, carry, cfg, q_chunk), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = scan_layers(body, x, params["layers"])
+    return L.rms_norm(params["final_norm"], x)
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array] = None,
+    inputs_embeds: Optional[jax.Array] = None,
+    *,
+    q_chunk: int = 0,
+    remat: bool = False,
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, S, V]."""
+    x = forward_hidden(params, cfg, tokens, inputs_embeds,
+                       q_chunk=q_chunk, remat=remat)
+    from repro.distributed import hints
+    return hints.constrain(x @ head_weight(params, cfg).T, "batch", None, "model")
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int, dtype=jnp.float32):
+    """Stacked KV cache [L, B, S, Hkv, hd] x2 + position scalar."""
+    kv = {
+        "k": jnp.zeros((cfg.n_layers, batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+    return {"kv": kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array],           # [B, 1] (or None with embeds)
+    cache,
+    inputs_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Any]:
+    """One token step -> (logits [B, 1, V], new cache)."""
+    pos = cache["pos"]
+    x = params["embed"][tokens] if inputs_embeds is None else inputs_embeds
+
+    def body(carry, scanned):
+        lp, kc = scanned
+        x = carry
+        h, kc_new = L.attention_decode_step(
+            lp["attn"], L.rms_norm(lp["attn_norm"], x), kc, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+            window=cfg.attn_window,
+        )
+        x = x + h
+        y = L.rms_norm(lp["mlp_norm"], x)
+        if cfg.family == "moe":
+            h2 = L.moe_forward(lp["moe"], y, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+        else:
+            h2 = L.swiglu(lp["mlp"], y)
+        return x + h2, kc_new
+
+    x, new_kv = scan_layers(body, x, (params["layers"], cache["kv"]))
+    x = L.rms_norm(params["final_norm"], x)
+    head_w = params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = x @ head_w.T
+    return logits, {"kv": new_kv, "pos": pos + 1}
+
+
+def ce_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def chunked_ce_loss(x: jax.Array, head_w: jax.Array, targets: jax.Array,
+                    chunk: int = 512) -> jax.Array:
+    """CE over a vocab head WITHOUT materialising [B, S, V] logits: scan
+    over sequence chunks, recomputing each chunk's logits in the backward
+    pass (checkpointed body).  Memory: O(B * chunk * V / tp) fp32.
+
+    The full-logit path peaked at ~4.7 GiB/device on a 152k vocab (see
+    EXPERIMENTS.md §Perf) — this is the fix."""
+    from repro.distributed import hints
+    from repro.models.scan import scan_layers
+
+    b, s, d = x.shape
+    if s % chunk or s == chunk:
+        logits = hints.constrain(x @ head_w.T, "batch", None, "model")
+        return ce_loss(logits, targets)
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, inp):
+        xc, tc = inp
+        logits = hints.constrain(xc @ head_w.T, "batch", None, "model")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = scan_layers(body, jnp.zeros((), jnp.float32), (xs, ts))
+    return total / (b * s)

@@ -1,0 +1,50 @@
+"""Performance-variant flags for the §Perf hillclimb.
+
+A module-level (trace-time) configuration consulted by the sharding rules
+and the model code.  The dry-run sets a variant, lowers, and compares
+roofline terms against the baseline — every flag corresponds to one
+hypothesis in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass
+class PerfVariant:
+    name: str = "baseline"
+    # training layout: replace TP (activation all-reduces per layer) with
+    # 2-axis FSDP + sequence parallelism (per-layer weight all-gathers)
+    fsdp_sp: bool = False
+    # decode: keep seq-sharded KV local (distributed flash-decode combine)
+    # instead of gathering the cache every step
+    seq_sharded_decode: bool = True
+    # serving quantization: store params / KV cache in int8
+    int8_weights: bool = False
+    int8_kv: bool = False
+    # microbatch override (None = heuristic)
+    microbatches: Optional[int] = None
+    # logical mesh re-aspect for the same chip count, e.g. ((32, 8),
+    # ("data", "model")) — halves TP activation all-reduce bytes when the
+    # batch can shard wider (EXPERIMENTS.md §Perf granite train iteration 2)
+    mesh_override: Optional[Tuple[Tuple[int, ...], Tuple[str, ...]]] = None
+
+
+_CURRENT = PerfVariant()
+
+
+def current() -> PerfVariant:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def variant(v: PerfVariant):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = v
+    try:
+        yield
+    finally:
+        _CURRENT = prev

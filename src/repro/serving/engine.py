@@ -1,0 +1,157 @@
+"""Spartus serving engine: streaming DeltaLSTM inference over CBCSC
+weights — the software twin of the accelerator datapath (Fig. 4).
+
+Per step and per layer:
+  IPU   -> kernels.ops.delta_encode   (thresholded Δ, reference update)
+  CTRL  -> kernels.ops.select_active_columns (fixed-capacity NZI list)
+  MACs  -> kernels.ops.stsp_spmv      (CBCSC spatio-temporal SpMxSpV)
+  HPE   -> kernels.ops.lstm_pointwise (gates + cell update)
+
+The engine exports any trained LSTM AM (models/lstm_am.py) into packed
+CBCSC + int8 form, runs batched streaming sessions, and records the
+per-step NZI occupancies that drive the hwsim performance model.
+
+``use_pallas`` switches the kernel implementations (interpret mode on
+CPU, compiled Pallas on TPU); the XLA path is numerically identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CBCSC, blen_for, cbcsc_encode, int8_pack, keep_count,
+)
+from repro.core.delta_lstm import stacked_weight_matrix
+from repro.kernels import ops
+from repro.models.lstm_am import LSTMAMConfig
+
+
+@dataclasses.dataclass
+class PackedLayer:
+    enc: CBCSC                 # CBCSC arrays (values already int8-dequantized)
+    scale: jax.Array           # int8 weight scale
+    bias: jax.Array            # [4, H] initial delta memories
+    input_dim: int
+    hidden_dim: int
+    capacity: int              # NZI list capacity
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    theta: float = 0.1
+    gamma: float = 0.9375
+    m: int = 64                # PEs per column (CBCSC granularity)
+    capacity_frac: float = 0.5  # NZI capacity as fraction of columns
+    use_pallas: bool = False
+    quant_bits: int = 8
+
+
+def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
+    """Export one (CBTD-pruned) LSTM layer to the serving format."""
+    w = stacked_weight_matrix(params)              # [4H, D+H]
+    q8, scale = int8_pack(w)
+    wq = q8.astype(jnp.float32) * scale            # dequantized int8 grid
+    wq = wq * (w != 0)                             # keep pruned zeros exact
+    h4, n_cols = wq.shape
+    m = cfg.m
+    while h4 % m:
+        m //= 2
+    enc = cbcsc_encode(wq, m)
+    capacity = max(int(n_cols * cfg.capacity_frac), 8)
+    return PackedLayer(
+        enc=enc, scale=scale, bias=params["b"],
+        input_dim=w.shape[1] - params["w_h"].shape[1],
+        hidden_dim=params["w_h"].shape[1], capacity=capacity,
+    )
+
+
+class LayerState:
+    """Mutable per-session state of one DeltaLSTM layer (x̂/ĥ/c/h/DM)."""
+
+    def __init__(self, layer: PackedLayer, dtype=jnp.float32):
+        d, h = layer.input_dim, layer.hidden_dim
+        self.s_hat = jnp.zeros((d + h,), dtype)    # concatenated x̂ / ĥ
+        self.c = jnp.zeros((h,), dtype)
+        self.h = jnp.zeros((h,), dtype)
+        self.dm = layer.bias.astype(dtype).reshape(-1)  # [4H]
+
+
+def _step_layer(
+    layer: PackedLayer, state: LayerState, x: jax.Array, cfg: EngineConfig
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """One streaming step of one layer.  x: [D] -> h: [H]."""
+    s = jnp.concatenate([x, state.h])
+    delta, s_hat, nnz = ops.delta_encode(
+        s, state.s_hat, cfg.theta, use_pallas=cfg.use_pallas
+    )
+    idx, vals, dropped = ops.select_active_columns(delta, layer.capacity)
+    dm = state.dm + ops.stsp_spmv(
+        layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
+        use_pallas=cfg.use_pallas,
+    ).astype(state.dm.dtype)
+    h_new, c_new = ops.lstm_pointwise(
+        dm.reshape(4, layer.hidden_dim), state.c, use_pallas=cfg.use_pallas
+    )
+    state.s_hat = s_hat
+    state.c = c_new
+    state.h = h_new
+    state.dm = dm
+    stats = {"nnz": int(nnz), "dropped": int(dropped),
+             "n_cols": int(s.shape[0])}
+    return h_new, stats
+
+
+class SpartusEngine:
+    """Multi-layer streaming engine with per-step sparsity telemetry."""
+
+    def __init__(self, am_params: Dict[str, Any], am_cfg: LSTMAMConfig,
+                 cfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.layers = [pack_lstm_layer(lp, cfg) for lp in am_params["lstm"]]
+        self.fcl = am_params["fcl"]
+        self.logit = am_params["logit"]
+        self.am_cfg = am_cfg
+        self.telemetry: List[Dict[str, int]] = []
+
+    def new_session(self) -> List[LayerState]:
+        return [LayerState(l) for l in self.layers]
+
+    def step(self, session: List[LayerState], x: jax.Array) -> jax.Array:
+        """One frame through the whole AM -> logits [n_classes]."""
+        h = x
+        for li, (layer, st) in enumerate(zip(self.layers, session)):
+            h, stats = _step_layer(layer, st, h, self.cfg)
+            stats["layer"] = li
+            self.telemetry.append(stats)
+        h = jax.nn.relu(h @ self.fcl["w"].T + self.fcl["b"])
+        return h @ self.logit["w"].T + self.logit["b"]
+
+    def run_utterance(self, feats: jax.Array) -> jax.Array:
+        """feats: [T, D] -> logits [T, n_classes] (batch-1 streaming)."""
+        session = self.new_session()
+        return jnp.stack([self.step(session, feats[t])
+                          for t in range(feats.shape[0])])
+
+    # -- telemetry -> hardware model -----------------------------------------
+
+    def measured_sparsity(self) -> Dict[str, float]:
+        if not self.telemetry:
+            return {}
+        nnz = np.array([t["nnz"] for t in self.telemetry], np.float64)
+        cols = np.array([t["n_cols"] for t in self.telemetry], np.float64)
+        dropped = np.array([t["dropped"] for t in self.telemetry], np.float64)
+        return {
+            "temporal_sparsity": float(1.0 - (nnz / cols).mean()),
+            "capacity_overflow_rate": float((dropped > 0).mean()),
+            "mean_active_columns": float(nnz.mean()),
+        }
+
+    def weight_sparsity(self) -> float:
+        dense = sum(l.enc.h * l.enc.q for l in self.layers)
+        nnz = sum(float(jnp.sum(l.enc.valid)) for l in self.layers)
+        return 1.0 - nnz / dense

@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing (no orbax offline — built on numpy .npz).
+
+Design for 1000+-node operation:
+  * atomic: write to ``<dir>/tmp.<step>.<pid>`` then ``os.replace`` — a
+    crash mid-write never corrupts the latest checkpoint;
+  * per-process shard files (``proc{i}.npz``) — each host writes only its
+    addressable shards, no cross-host traffic on the save path;
+  * async: saves run on a single background thread; the train loop only
+    blocks if a previous save is still in flight (bounded staleness = 1);
+  * retention: keep the newest K checkpoints plus every multiple of
+    ``keep_period`` (so post-mortems of long runs have anchors);
+  * ``restore_latest`` skips incomplete checkpoints (missing COMMIT marker),
+    which is what makes kill -9 / preemption recovery safe.
+
+Pytrees are flattened to path-keyed arrays; the iterator state and a
+metadata dict ride along, so a restart resumes the data stream exactly.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(tree, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    STEP_RE = re.compile(r"^step_(\d+)$")
+
+    def __init__(
+        self,
+        directory: str,
+        keep_last: int = 3,
+        keep_period: Optional[int] = None,
+        process_index: Optional[int] = None,
+        async_save: bool = True,
+    ):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.keep_period = keep_period
+        self.process_index = (
+            process_index if process_index is not None else jax.process_index()
+        )
+        os.makedirs(directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._inflight: Optional[cf.Future] = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, metadata: Optional[Dict[str, Any]] = None):
+        """Snapshot now (device_get), write async if enabled."""
+        arrays = _flatten(tree)  # host copies — safe to mutate tree afterwards
+        meta = dict(metadata or {})
+        if self._pool is None:
+            self._write(step, arrays, meta)
+            return None
+        self.wait()  # bound in-flight saves to 1
+        self._inflight = self._pool.submit(self._write, step, arrays, meta)
+        return self._inflight
+
+    def wait(self):
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+
+    def _write(self, step: int, arrays, meta):
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}.{self.process_index}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"proc{self.process_index}.npz"), **arrays)
+        with open(os.path.join(tmp, f"meta{self.process_index}.json"), "w") as f:
+            json.dump({"step": step, **meta}, f)
+        # single-controller commit: proc 0 marks completeness
+        if self.process_index == 0:
+            with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                f.write(str(step))
+        with self._lock:
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        keep = set(steps[-self.keep_last:]) if self.keep_last else set(steps)
+        if self.keep_period:
+            keep |= {s for s in steps if s % self.keep_period == 0}
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                              ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = self.STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "COMMIT")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template) -> Tuple[Any, Dict[str, Any]]:
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        npz = np.load(os.path.join(path, f"proc{self.process_index}.npz"))
+        arrays = {k: npz[k] for k in npz.files}
+        with open(os.path.join(path, f"meta{self.process_index}.json")) as f:
+            meta = json.load(f)
+        return _unflatten_into(template, arrays), meta
+
+    def restore_latest(self, template):
+        """(tree, meta, step) or (template, {}, None) if no checkpoint."""
+        step = self.latest_step()
+        if step is None:
+            return template, {}, None
+        tree, meta = self.restore(step, template)
+        return tree, meta, step

@@ -1,0 +1,149 @@
+"""Connectionist Temporal Classification loss in pure JAX (Sec. V-B).
+
+The paper trains its acoustic models with CTC (Graves et al. 2006) so the
+logit layer emits phonemes directly.  This is the standard log-space
+forward algorithm over the blank-extended label sequence, implemented with
+``jax.lax.scan`` (time) and vmapped over the batch.  Supports padded
+logits and labels via explicit lengths.
+
+Also provides the greedy decoder + edit distance used for the paper's PER
+metric (greedy best-path decoding, Sec. V-B).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _extend_labels(labels: jax.Array, blank: int) -> jax.Array:
+    """[L] -> blank-interleaved [2L+1]: (b, l1, b, l2, ..., b)."""
+    l = labels.shape[0]
+    ext = jnp.full((2 * l + 1,), blank, labels.dtype)
+    return ext.at[1::2].set(labels)
+
+
+def _ctc_loss_single(
+    log_probs: jax.Array,   # [T, V] log-softmaxed
+    labels: jax.Array,      # [L] padded with anything
+    logit_len: jax.Array,   # scalar int
+    label_len: jax.Array,   # scalar int
+    blank: int,
+) -> jax.Array:
+    t_max, _ = log_probs.shape
+    l_max = labels.shape[0]
+    s = 2 * l_max + 1
+    ext = _extend_labels(labels, blank)                       # [S]
+
+    # Which extended positions may copy from s-2 (skip a blank): label
+    # positions whose label differs from the previous label position.
+    prev_label = jnp.roll(ext, 2)
+    can_skip = (ext != blank) & (ext != prev_label)
+    can_skip = can_skip.at[:2].set(False)                     # no s-2 for s<2
+
+    emit0 = log_probs[0][ext]
+    alpha0 = jnp.full((s,), NEG_INF).at[0].set(emit0[0]).at[1].set(
+        jnp.where(label_len > 0, emit0[1], NEG_INF)
+    )
+
+    def step(alpha, t):
+        emit = log_probs[t][ext]                              # [S]
+        a_prev1 = jnp.concatenate([jnp.array([NEG_INF]), alpha[:-1]])
+        a_prev2 = jnp.concatenate([jnp.array([NEG_INF, NEG_INF]), alpha[:-2]])
+        a_prev2 = jnp.where(can_skip, a_prev2, NEG_INF)
+        stacked = jnp.stack([alpha, a_prev1, a_prev2])
+        new = jax.nn.logsumexp(stacked, axis=0) + emit
+        # freeze past the true sequence length (padding frames):
+        new = jnp.where(t < logit_len, new, alpha)
+        return new, None
+
+    alpha, _ = jax.lax.scan(step, alpha0, jnp.arange(1, t_max))
+
+    end = 2 * label_len                                        # final blank pos
+    last_label = jnp.where(label_len > 0, end - 1, 0)
+    ll = jnp.logaddexp(
+        alpha[end], jnp.where(label_len > 0, alpha[last_label], NEG_INF)
+    )
+    return -ll
+
+
+@functools.partial(jax.jit, static_argnames=("blank",))
+def ctc_loss(
+    logits: jax.Array,      # [B, T, V]
+    labels: jax.Array,      # [B, L] int
+    logit_lens: jax.Array,  # [B]
+    label_lens: jax.Array,  # [B]
+    blank: int = 0,
+) -> jax.Array:
+    """Mean per-sequence negative log likelihood."""
+    log_probs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    losses = jax.vmap(_ctc_loss_single, in_axes=(0, 0, 0, 0, None))(
+        log_probs, labels, logit_lens, label_lens, blank
+    )
+    return jnp.mean(losses)
+
+
+def ctc_loss_brute_force(
+    log_probs: np.ndarray, labels: np.ndarray, blank: int = 0
+) -> float:
+    """Enumerate every alignment — O(V^T); oracle for tiny test cases."""
+    t, v = log_probs.shape
+    total = NEG_INF
+
+    def collapse(path):
+        out, prev = [], None
+        for p in path:
+            if p != prev and p != blank:
+                out.append(p)
+            prev = p
+        return out
+
+    import itertools
+
+    for path in itertools.product(range(v), repeat=t):
+        if collapse(path) == list(labels):
+            lp = sum(log_probs[i, p] for i, p in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return -float(total)
+
+
+def greedy_decode(logits: jax.Array, logit_lens: jax.Array, blank: int = 0):
+    """Best-path decoding (paper: 'simple greedy decoder').  Returns a
+    python list of label lists (host-side)."""
+    best = np.asarray(jnp.argmax(logits, axis=-1))
+    lens = np.asarray(logit_lens)
+    out = []
+    for b in range(best.shape[0]):
+        seq, prev = [], None
+        for tt in range(int(lens[b])):
+            p = int(best[b, tt])
+            if p != prev and p != blank:
+                seq.append(p)
+            prev = p
+        out.append(seq)
+    return out
+
+
+def edit_distance(a, b) -> int:
+    """Levenshtein distance (for PER: sub+ins+del / len(ref))."""
+    if len(a) < len(b):
+        a, b = b, a
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        for j, cb in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1, prev[j - 1] + (ca != cb)))
+        prev = cur
+    return prev[-1]
+
+
+def phone_error_rate(hyps, refs) -> float:
+    """PER = total edit distance / total reference length."""
+    dist = sum(edit_distance(h, r) for h, r in zip(hyps, refs))
+    total = sum(len(r) for r in refs)
+    return dist / max(total, 1)

@@ -1,0 +1,117 @@
+"""Optimizers & schedules (no optax offline — implemented from scratch).
+
+AdamW with global-norm clipping, plus warmup-cosine / constant schedules.
+States are plain pytrees so they shard/pjit/checkpoint like parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: object   # pytree like params
+    v: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "constant"      # constant | cosine | linear
+    warmup_steps: int = 0
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "cosine":
+            frac = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0,
+            )
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac)
+            )
+        elif cfg.schedule == "linear":
+            frac = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0,
+            )
+            decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.lr * warm * decay
+
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_init(params) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, state: AdamState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state.step + 1
+    lr = schedule_fn(cfg)(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }

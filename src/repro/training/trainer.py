@@ -1,0 +1,211 @@
+"""The paper's two-phase training procedure (Sec. V-C) as a fault-tolerant
+trainer.
+
+Phase 1 — *pretrain*: plain LSTM + CBTD applied after every parameter
+update (Alg. 2), alpha annealed 0 -> 1 by ``delta_alpha`` per epoch.
+Phase 2 — *retrain*: weights copied into DeltaLSTM layers of the same
+size, trained with alpha = 1 and a fixed delta threshold Theta.
+
+Works single-host (CPU tests / examples) and under pjit (launch/train.py
+re-uses ``train_step`` with sharded arguments).  CBTD runs *inside* the
+jitted step so at scale it never leaves the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alpha_at, cbtd_prune_tree, summarize_delta_aux
+from repro.core.cbtd import CBTDConfig
+from repro.data.speech import SpeechConfig, SpeechDataset
+from repro.models import lstm_am
+from repro.training.checkpoint import CheckpointManager
+from repro.training.ctc import ctc_loss, greedy_decode, phone_error_rate
+from repro.training.optimizer import AdamState, AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    model: lstm_am.LSTMAMConfig = lstm_am.LSTMAMConfig(hidden_dim=64, n_layers=2)
+    data: SpeechConfig = SpeechConfig()
+    opt: AdamWConfig = AdamWConfig(lr=3e-3)
+    batch_size: int = 16
+    steps_per_epoch: int = 25
+    # CBTD (Alg. 2)
+    cbtd_gamma: Optional[float] = 0.94
+    cbtd_m: int = 64
+    cbtd_delta_alpha: float = 1.0 / 30.0
+    cbtd_stochastic: bool = False   # alpha<1 stochastic drops (paper) vs determ.
+    # checkpointing
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    seed: int = 0
+
+
+def _cbtd_layout(cfg: TrainConfig) -> Optional[Dict[str, CBTDConfig]]:
+    if cfg.cbtd_gamma is None:
+        return None
+    c = CBTDConfig(gamma=cfg.cbtd_gamma, m=cfg.cbtd_m,
+                   delta_alpha=cfg.cbtd_delta_alpha)
+    return {"w_x": c, "w_h": c, "fcl/w": c}
+
+
+def make_train_step(cfg: TrainConfig):
+    layout = _cbtd_layout(cfg)
+
+    def loss_fn(params, batch):
+        feats, feat_lens, labels, label_lens = batch
+        logits, _ = lstm_am.forward(params, cfg.model, feats)
+        return ctc_loss(logits, labels, feat_lens, label_lens)
+
+    @jax.jit
+    def train_step(params, opt_state: AdamState, batch, alpha, key):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, cfg.opt)
+        if layout is not None:
+            prune_key = key if cfg.cbtd_stochastic else None
+            params = cbtd_prune_tree(params, layout, alpha, prune_key)
+        metrics = {"loss": loss, **metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_logits(params, cfg: lstm_am.LSTMAMConfig, feats):
+    logits, aux = lstm_am.forward(params, cfg, feats, collect_aux=True)
+    return logits, aux
+
+
+def evaluate_per(params, cfg: TrainConfig, dataset: SpeechDataset,
+                 n_batches: int = 4) -> float:
+    """Greedy-decode PER on freshly drawn eval batches (paper Sec. V-B)."""
+    hyps, refs = [], []
+    # disjoint held-out stream: same distribution (same class-means table),
+    # different fold of the dataset key
+    eval_ds = SpeechDataset(cfg.data, dataset.batch, process_index=10_000)
+    for _ in range(n_batches):
+        feats, feat_lens, labels, label_lens = next(eval_ds)
+        logits, _ = eval_logits(params, cfg.model, feats)
+        hyps += greedy_decode(logits, feat_lens)
+        labels, label_lens = jax.device_get((labels, label_lens))
+        refs += [list(labels[b, : int(label_lens[b])]) for b in range(labels.shape[0])]
+    return phone_error_rate(hyps, refs)
+
+
+def measure_delta_stats(params, cfg: TrainConfig, dataset: SpeechDataset,
+                        n_batches: int = 2) -> Dict[str, Any]:
+    """Run the DeltaLSTM forward collecting delta occupancy (Fig. 13a)."""
+    assert cfg.model.delta, "delta stats need a DeltaLSTM model config"
+    per_layer: Dict[int, Dict[str, list]] = {}
+    for _ in range(n_batches):
+        feats, *_ = next(dataset)
+        _, aux = eval_logits(params, cfg.model, feats)
+        for li, layer_aux in enumerate(aux["layers"]):
+            d = per_layer.setdefault(li, {"nnz_dx": [], "nnz_dh": [],
+                                          "dx_masks": [], "dh_masks": []})
+            for k in d:
+                d[k].append(layer_aux[k])
+    stats = {}
+    dims = [cfg.model.input_dim] + [cfg.model.hidden_dim] * (cfg.model.n_layers - 1)
+    for li, d in per_layer.items():
+        nnz_dx = jnp.concatenate([jnp.ravel(a) for a in d["nnz_dx"]])
+        nnz_dh = jnp.concatenate([jnp.ravel(a) for a in d["nnz_dh"]])
+        stats[f"layer{li}"] = summarize_delta_aux(
+            {"nnz_dx": nnz_dx, "nnz_dh": nnz_dh}, dims[li], cfg.model.hidden_dim
+        )
+        # keep masks for balance-ratio analysis: [T', F] per layer
+        stats[f"layer{li}"]["dx_masks"] = jnp.concatenate(
+            [m.reshape(-1, m.shape[-1]) for m in d["dx_masks"]]
+        )
+        stats[f"layer{li}"]["dh_masks"] = jnp.concatenate(
+            [m.reshape(-1, m.shape[-1]) for m in d["dh_masks"]]
+        )
+    return stats
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    losses: list
+    final_loss: float
+    steps: int
+    wall_s: float
+
+
+def train(
+    cfg: TrainConfig,
+    epochs: int = 2,
+    params: Any = None,
+    resume: bool = True,
+    log_every: int = 0,
+) -> TrainResult:
+    """Run the training loop (one phase).  Checkpoint/restart-safe: if
+    ``cfg.ckpt_dir`` is set and a committed checkpoint exists, training
+    resumes from it (params, optimizer, data-iterator position, epoch)."""
+    key = jax.random.key(cfg.seed)
+    pkey, key = jax.random.split(key)
+    if params is None:
+        params = lstm_am.init_params(pkey, cfg.model)
+    opt_state = adamw_init(params)
+    dataset = SpeechDataset(cfg.data, cfg.batch_size)
+    step = 0
+
+    mgr = None
+    if cfg.ckpt_dir:
+        mgr = CheckpointManager(cfg.ckpt_dir, keep_last=2, process_index=0)
+        if resume:
+            (params, opt_state), meta, ck_step = mgr.restore_latest((params, opt_state))
+            if ck_step is not None:
+                step = int(meta.get("step", ck_step))
+                dataset.load_state_dict({"step": meta.get("data_step", step)})
+
+    train_step = make_train_step(cfg)
+    losses = []
+    t0 = time.time()
+    total_steps = epochs * cfg.steps_per_epoch
+    while step < total_steps:
+        epoch = step // cfg.steps_per_epoch
+        alpha = alpha_at(epoch, cfg.cbtd_delta_alpha) if cfg.cbtd_gamma else 0.0
+        batch = next(dataset)
+        key, skey = jax.random.split(key)
+        params, opt_state, metrics = train_step(params, opt_state, batch, alpha, skey)
+        losses.append(float(metrics["loss"]))
+        step += 1
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d} epoch {epoch:3d} alpha {float(alpha):.2f} "
+                  f"loss {losses[-1]:.4f}")
+        if mgr and step % cfg.ckpt_every == 0:
+            mgr.save(step, (params, opt_state),
+                     {"step": step, "data_step": dataset.step})
+    if mgr:
+        mgr.save(total_steps, (params, opt_state),
+                 {"step": total_steps, "data_step": dataset.step})
+        mgr.wait()
+    return TrainResult(
+        params=params, opt_state=opt_state, losses=losses,
+        final_loss=float(jnp.mean(jnp.array(losses[-5:]))) if losses else float("nan"),
+        steps=step, wall_s=time.time() - t0,
+    )
+
+
+def pretrain_retrain(
+    cfg: TrainConfig, pretrain_epochs: int = 2, retrain_epochs: int = 1,
+    theta: float = 0.1,
+) -> Tuple[TrainResult, TrainResult, TrainConfig]:
+    """The paper's full pipeline: LSTM+CBTD pretrain, then DeltaLSTM retrain
+    with alpha=1 (Sec. V-C).  Returns both results + the retrain config."""
+    pre = train(cfg, epochs=pretrain_epochs)
+    retrain_cfg = dataclasses.replace(
+        cfg,
+        model=dataclasses.replace(cfg.model, delta=True, theta=theta),
+        cbtd_delta_alpha=1.0,  # alpha = 1 from the first retrain epoch
+    )
+    post = train(retrain_cfg, epochs=retrain_epochs, params=pre.params)
+    return pre, post, retrain_cfg

@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests: instantiate a REDUCED config of each
+assigned family, run one forward/train step + one decode step on CPU,
+assert output shapes + finiteness + a gradient step works.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models import api
+from repro.models.config import SHAPES, shape_applicable
+
+ARCHS = sorted(REGISTRY)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.key(0)
+
+
+def _reduced(name):
+    return REGISTRY[name].reduced()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_smoke(name, rng):
+    cfg = _reduced(name)
+    params = api.init_params(cfg, rng)
+    batch = api.make_train_batch(cfg, rng, batch=2, seq=32)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.train_loss(p, cfg, batch)
+    )(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves), f"{name}: NaN grads"
+    # at least one nonzero gradient per arch
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in gleaves)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_step_smoke(name, rng):
+    cfg = _reduced(name)
+    params = api.init_params(cfg, rng)
+    cache = api.init_cache(cfg, batch=2, s_cache=16)
+    if cfg.family == "vlm":
+        inputs = jax.random.normal(rng, (2, 1, cfg.d_model))
+    else:
+        inputs = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = api.serve_step(params, cfg, inputs, cache)
+    assert logits.shape == (2, 1, cfg.vocab), f"{name}: {logits.shape}"
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: non-finite logits"
+    # second step advances position
+    logits2, cache2 = api.serve_step(params, cfg, inputs, cache)
+    assert int(cache2["pos"]) == 2
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "mamba2-130m",
+                                  "recurrentgemma-9b", "seamless-m4t-medium"])
+def test_decode_matches_prefill(name, rng):
+    """Step-by-step decode logits == teacher-forced forward logits (the
+    cache machinery is consistent with the parallel path)."""
+    cfg = _reduced(name)
+    params = api.init_params(cfg, rng)
+    t = 8
+    toks = jax.random.randint(jax.random.key(1), (1, t), 0, cfg.vocab)
+
+    if cfg.family == "audio":
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.key(2), (1, 12, cfg.d_model))
+        enc_out = encdec.encode(params, cfg, frames)
+        full = encdec.decode_train(params, cfg, toks, enc_out)
+        cache = encdec.init_cache(cfg, 1, enc_len=12)
+        cross = encdec.build_cross_cache(params, cfg, enc_out)
+        cache["cross"] = cross
+        outs = []
+        for i in range(t):
+            lg, cache = encdec.decode_step(params, cfg, toks[:, i : i + 1], cache)
+            outs.append(lg[:, 0])
+    else:
+        from repro.models import transformer, mamba2, rglru
+        mod = {"dense": transformer, "ssm": mamba2, "hybrid": rglru}[cfg.family]
+        full = mod.forward(params, cfg, toks)
+        cache = api.init_cache(cfg, batch=1, s_cache=t)
+        outs = []
+        for i in range(t):
+            lg, cache = api.serve_step(params, cfg, toks[:, i : i + 1], cache)
+            outs.append(lg[:, 0])
+
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(stepped, np.float32), np.asarray(full, np.float32),
+        rtol=2e-2, atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_cbtd_applies_to_arch(name, rng):
+    """The paper's pruning covers every linear of every assigned arch."""
+    from repro.core.cbtd import cbtd_prune_tree
+    from repro.core import tree_weight_sparsity
+
+    cfg = _reduced(name)
+    params = api.init_params(cfg, rng)
+    layout = api.cbtd_layout(cfg, gamma=0.5, m=4)
+    pruned = cbtd_prune_tree(params, layout, alpha=1.0)
+    # embeddings untouched
+    np.testing.assert_array_equal(np.asarray(pruned["embed"]),
+                                  np.asarray(params["embed"]))
+    # a known linear got ~50% sparsity
+    flat = jax.tree_util.tree_flatten_with_path(pruned)[0]
+    hit = 0
+    for path, leaf in flat:
+        pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if any(pat in pname for pat in layout) and leaf.ndim >= 2:
+            sp = float(jnp.mean(leaf == 0))
+            assert 0.4 <= sp <= 0.6, f"{name} {pname}: sparsity {sp}"
+            hit += 1
+    # stacked leaves cover all layers, so even 2 matches (e.g. mamba2's
+    # in/out projections) span the whole network
+    assert hit >= 2, f"{name}: CBTD matched only {hit} weights"
+
+
+def test_shape_applicability_rules():
+    cells = {c.name: c for c in SHAPES}
+    # full-attention archs skip long_500k
+    for name in ["qwen2-0.5b", "granite-34b", "olmoe-1b-7b", "pixtral-12b",
+                 "seamless-m4t-medium"]:
+        ok, reason = shape_applicable(REGISTRY[name], cells["long_500k"])
+        assert not ok and "full-attention" in reason
+    # sub-quadratic archs run it
+    for name in ["mamba2-130m", "recurrentgemma-9b"]:
+        ok, _ = shape_applicable(REGISTRY[name], cells["long_500k"])
+        assert ok
+    # everything runs the other cells
+    for name in ARCHS:
+        for cell in ["train_4k", "prefill_32k", "decode_32k"]:
+            ok, _ = shape_applicable(REGISTRY[name], cells[cell])
+            assert ok
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact assigned hyperparameters (guards against drift)."""
+    c = REGISTRY["qwen2-0.5b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        24, 896, 14, 2, 4864, 151936) and c.qkv_bias
+    c = REGISTRY["qwen3-1.7b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        28, 2048, 16, 8, 6144, 151936) and c.qk_norm
+    c = REGISTRY["granite-34b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        88, 6144, 48, 1, 24576, 49152)
+    c = REGISTRY["internlm2-20b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        48, 6144, 48, 8, 16384, 92544)
+    c = REGISTRY["mamba2-130m"]
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == (24, 768, 50280, 128)
+    c = REGISTRY["pixtral-12b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        40, 5120, 32, 8, 14336, 131072)
+    c = REGISTRY["granite-moe-1b-a400m"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.n_experts, c.top_k, c.vocab) == (
+        24, 1024, 512, 32, 8, 49155)
+    c = REGISTRY["olmoe-1b-7b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.n_experts, c.top_k, c.vocab) == (
+        16, 2048, 1024, 64, 8, 50304)
+    c = REGISTRY["seamless-m4t-medium"]
+    assert (c.n_enc_layers, c.n_dec_layers, c.d_model, c.d_ff, c.vocab) == (
+        12, 12, 1024, 4096, 256206)
+    c = REGISTRY["recurrentgemma-9b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        38, 4096, 16, 1, 12288, 256000)
+    assert c.block_pattern == ("rglru", "rglru", "attn") and c.attn_window == 2048

@@ -1,0 +1,114 @@
+"""CBCSC (Alg. 3) round-trip and SpMV-from-format correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    apply_cbtd,
+    blen_for,
+    cbcsc_decode,
+    cbcsc_encode,
+    cbcsc_spmv_reference,
+    keep_count,
+)
+
+
+def _pruned_matrix(seed, h, q, m, gamma):
+    w = jax.random.normal(jax.random.key(seed), (h, q)) + 0.01
+    return apply_cbtd(w, gamma, m, alpha=1.0)
+
+
+@st.composite
+def _case(draw):
+    m = draw(st.sampled_from([2, 4, 8]))
+    s = draw(st.integers(2, 12))
+    q = draw(st.integers(1, 16))
+    gamma = draw(st.sampled_from([0.5, 0.75, 0.9]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, s, q, gamma, seed
+
+
+@given(_case())
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_exact(case):
+    m, s, q, gamma, seed = case
+    h = m * s
+    w = _pruned_matrix(seed, h, q, m, gamma)
+    enc = cbcsc_encode(w, m, blen=blen_for(h, m, gamma))
+    np.testing.assert_array_equal(np.asarray(cbcsc_decode(enc)), np.asarray(w))
+
+
+@given(_case())
+@settings(max_examples=25, deadline=None)
+def test_spmv_from_format(case):
+    m, s, q, gamma, seed = case
+    h = m * s
+    w = _pruned_matrix(seed, h, q, m, gamma)
+    enc = cbcsc_encode(w, m)
+    ds = jax.random.normal(jax.random.key(seed + 1), (q,))
+    np.testing.assert_allclose(
+        np.asarray(cbcsc_spmv_reference(enc, ds)),
+        np.asarray(w @ ds),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_blen_matches_paper():
+    # Alg. 3: BLEN = ceil(H/M * (1-gamma)); Table notation M=64, H=4096
+    assert blen_for(4096, 64, 0.94) == 4
+    assert blen_for(4096, 64, 0.9375) == 4
+    assert keep_count(4096, 64, 0.94) == 4
+
+
+def test_occupancy_violation_raises():
+    w = jnp.ones((8, 4))  # dense — every subcolumn full
+    with pytest.raises(ValueError):
+        cbcsc_encode(w, m=2, blen=1)
+
+
+def test_stream_order_matches_alg3():
+    """Alg. 3 order: outer j (columns), then i (PEs), then k (local)."""
+    # 4x2 matrix, M=2 PEs => subcolumns of length 2.
+    # rows: r=0 -> PE0 k0, r=1 -> PE1 k0, r=2 -> PE0 k1, r=3 -> PE1 k1
+    w = jnp.array(
+        [
+            [1.0, 5.0],
+            [2.0, 0.0],
+            [0.0, 6.0],
+            [4.0, 8.0],
+        ]
+    )
+    enc = cbcsc_encode(w, m=2, blen=2)
+    val, lidx = enc.to_stream()
+    # col j=0: PE0 subcol=[1,0] -> [1, pad]; PE1 subcol=[2,4] -> [2,4]
+    # col j=1: PE0 subcol=[5,6] -> [5,6];    PE1 subcol=[0,8] -> [8, pad]
+    expect_val = [1.0, 0.0, 2.0, 4.0, 5.0, 6.0, 8.0, 0.0]
+    expect_idx = [0, 0, 0, 1, 0, 1, 1, 0]
+    np.testing.assert_allclose(np.asarray(val), expect_val)
+    np.testing.assert_array_equal(np.asarray(lidx), expect_idx)
+
+
+def test_nbytes_accounting():
+    w = _pruned_matrix(0, 64, 32, 4, 0.75)
+    enc = cbcsc_encode(w, 4)
+    # paper: INT8 VAL + 8-bit LIDX
+    assert enc.nbytes(8, 8) == 2 * enc.val.size
+    # Edge-Spartus: 10-bit LIDX
+    assert enc.nbytes(8, 10) == (enc.val.size * 18 + 7) // 8
+
+
+def test_global_row_idx_roundtrip():
+    w = _pruned_matrix(3, 24, 6, 4, 0.5)
+    enc = cbcsc_encode(w, 4)
+    gidx = np.asarray(enc.global_row_idx())
+    val = np.asarray(enc.val)
+    valid = np.asarray(enc.valid)
+    dense = np.zeros((enc.h, enc.q), dtype=np.float32)
+    for j in range(enc.q):
+        for i in range(enc.m):
+            for b in range(enc.blen):
+                if valid[j, i, b]:
+                    dense[gidx[j, i, b], j] = val[j, i, b]
+    np.testing.assert_array_equal(dense, np.asarray(w))

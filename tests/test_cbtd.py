@@ -1,0 +1,127 @@
+"""CBTD (Alg. 1/2) property tests — the balance invariant is the whole
+point of the method, so it is tested with hypothesis across shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    alpha_at,
+    apply_cbtd,
+    cbtd_mask,
+    cbtd_tile_mask,
+    drop_count,
+    keep_count,
+)
+from repro.core.cbtd import CBTDConfig, cbtd_prune_tree
+
+
+@st.composite
+def _cbtd_case(draw):
+    m = draw(st.sampled_from([2, 4, 8]))
+    s = draw(st.integers(2, 16))  # subcolumn length
+    q = draw(st.integers(1, 24))
+    gamma = draw(st.sampled_from([0.25, 0.5, 0.75, 0.9]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, s, q, gamma, seed
+
+
+@given(_cbtd_case())
+@settings(max_examples=40, deadline=None)
+def test_balance_invariant(case):
+    """At alpha=1 every subcolumn of every column keeps exactly
+    S - floor(S*gamma) nonzeros (assuming no pre-existing zeros)."""
+    m, s, q, gamma, seed = case
+    h = m * s
+    w = np.asarray(
+        jax.random.normal(jax.random.key(seed), (h, q))
+    ) + 0.01  # avoid exact zeros
+    pruned = np.asarray(apply_cbtd(jnp.asarray(w), gamma, m, alpha=1.0))
+    keep = keep_count(h, m, gamma)
+    # subcolumn view: row r -> (PE r%m, local r//m)
+    sub = pruned.reshape(s, m, q)
+    nnz = (sub != 0).sum(axis=0)  # [m, q]
+    assert (nnz == keep).all(), f"unbalanced: {np.unique(nnz)} vs keep={keep}"
+
+
+@given(_cbtd_case())
+@settings(max_examples=30, deadline=None)
+def test_drops_smallest_magnitudes(case):
+    m, s, q, gamma, seed = case
+    h = m * s
+    w = np.asarray(jax.random.normal(jax.random.key(seed), (h, q))) + 0.01
+    mask = np.asarray(cbtd_mask(jnp.asarray(w), gamma, m, alpha=1.0))
+    sub_w = np.abs(w.reshape(s, m, q))
+    sub_m = mask.reshape(s, m, q)
+    # within every subcolumn, every kept element is >= every dropped element
+    for i in range(m):
+        for j in range(q):
+            kept = sub_w[sub_m[:, i, j], i, j]
+            dropped = sub_w[~sub_m[:, i, j], i, j]
+            if kept.size and dropped.size:
+                assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_alpha_zero_keeps_everything():
+    w = jax.random.normal(jax.random.key(0), (32, 8)) + 0.01
+    mask = cbtd_mask(w, 0.9, 4, alpha=0.0, key=jax.random.key(1))
+    assert bool(jnp.all(mask))
+
+
+def test_alpha_intermediate_drops_partially():
+    w = jax.random.normal(jax.random.key(0), (64, 32)) + 0.01
+    k = jax.random.key(2)
+    m_half = cbtd_mask(w, 0.9, 4, alpha=0.5, key=k)
+    m_full = cbtd_mask(w, 0.9, 4, alpha=1.0)
+    dropped_half = int(jnp.sum(~m_half))
+    dropped_full = int(jnp.sum(~m_full))
+    assert 0 < dropped_half < dropped_full
+    # stochastic drops are a subset of the alpha=1 candidate set:
+    assert bool(jnp.all(m_half | ~m_full | m_full))
+    assert bool(jnp.all((~m_half) <= (~m_full)))
+
+
+def test_alpha_schedule():
+    assert float(alpha_at(0, 1 / 30)) == 0.0
+    assert float(alpha_at(15, 1 / 30)) == pytest.approx(0.5)
+    assert float(alpha_at(30, 1 / 30)) == 1.0
+    assert float(alpha_at(100, 1 / 30)) == 1.0
+
+
+def test_achieved_sparsity_matches_gamma():
+    """Paper Table II: gamma=0.94, M=64, H=4096 -> 93.75% weight sparsity."""
+    h, q, m, gamma = 4096, 128, 64, 0.94
+    w = jax.random.normal(jax.random.key(0), (h, q)) + 0.01
+    pruned = apply_cbtd(w, gamma, m, alpha=1.0)
+    ws = float(jnp.mean(pruned == 0))
+    assert ws == pytest.approx(drop_count(h, m, gamma) / (h // m))
+    assert ws == pytest.approx(0.9375)
+
+
+def test_tile_mask_balance():
+    w = jax.random.normal(jax.random.key(0), (64, 512)) + 0.01
+    mask = cbtd_tile_mask(w, gamma=0.75, tile=(8, 128), alpha=1.0)
+    keep_tiles = mask.reshape(8, 8, 4, 128)[:, 0, :, 0]  # [tile_r, tile_c]
+    per_col = jnp.sum(keep_tiles.astype(jnp.int32), axis=0)
+    assert bool(jnp.all(per_col == per_col[0]))
+    assert int(per_col[0]) == 8 - int(8 * 0.75)
+
+
+def test_prune_tree_respects_layout():
+    params = {
+        "lstm": {"w_x": jnp.ones((8, 4)), "b": jnp.ones((4,))},
+        "head": {"w": jnp.ones((8, 4))},
+    }
+    layout = {"w_x": CBTDConfig(gamma=0.5, m=2)}
+    out = cbtd_prune_tree(params, layout, alpha=1.0)
+    assert float(jnp.mean(out["lstm"]["w_x"] == 0)) == pytest.approx(0.5)
+    assert bool(jnp.all(out["head"]["w"] == 1.0))  # untouched
+    assert bool(jnp.all(out["lstm"]["b"] == 1.0))  # 1-D untouched
+
+
+def test_wildcard_layout_prunes_all_2d():
+    params = {"a": jnp.ones((8, 4)), "b": {"c": jnp.ones((16, 2))}}
+    out = cbtd_prune_tree(params, {"*": CBTDConfig(gamma=0.5, m=2)}, alpha=1.0)
+    for leaf in jax.tree.leaves(out):
+        assert float(jnp.mean(leaf == 0)) == pytest.approx(0.5)

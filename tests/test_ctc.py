@@ -1,0 +1,90 @@
+"""CTC loss vs brute-force alignment enumeration + decoder/PER tests."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.ctc import (
+    ctc_loss,
+    ctc_loss_brute_force,
+    edit_distance,
+    greedy_decode,
+    phone_error_rate,
+)
+
+
+def _rand_case(key, t, v, l):
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (t, v))
+    labels = jax.random.randint(k2, (l,), 1, v)  # 0 is blank
+    return logits, labels
+
+
+@pytest.mark.parametrize("t,v,l", [(3, 3, 1), (4, 3, 2), (5, 4, 2), (6, 3, 3)])
+def test_matches_brute_force(t, v, l):
+    logits, labels = _rand_case(jax.random.key(t * 100 + v * 10 + l), t, v, l)
+    log_probs = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    expect = ctc_loss_brute_force(log_probs, np.asarray(labels))
+    got = float(
+        ctc_loss(
+            logits[None], labels[None], jnp.array([t]), jnp.array([l])
+        )
+    )
+    assert got == pytest.approx(expect, rel=1e-4)
+
+
+def test_padded_frames_ignored():
+    t, v, l = 5, 4, 2
+    logits, labels = _rand_case(jax.random.key(0), t, v, l)
+    # pad with garbage frames beyond logit_len
+    padded = jnp.concatenate([logits, 100 * jnp.ones((3, v))], axis=0)
+    a = float(ctc_loss(logits[None], labels[None], jnp.array([t]), jnp.array([l])))
+    b = float(ctc_loss(padded[None], labels[None], jnp.array([t]), jnp.array([l])))
+    assert a == pytest.approx(b, rel=1e-5)
+
+
+def test_padded_labels_ignored():
+    t, v, l = 6, 4, 2
+    logits, labels = _rand_case(jax.random.key(1), t, v, l)
+    padded_labels = jnp.concatenate([labels, jnp.array([3, 1])])
+    a = float(ctc_loss(logits[None], labels[None], jnp.array([t]), jnp.array([l])))
+    b = float(
+        ctc_loss(logits[None], padded_labels[None], jnp.array([t]), jnp.array([l]))
+    )
+    assert a == pytest.approx(b, rel=1e-5)
+
+
+def test_impossible_label_longer_than_frames():
+    # L > T: no valid alignment => very large loss
+    logits = jnp.zeros((2, 4))
+    labels = jnp.array([1, 2, 3])
+    loss = float(ctc_loss(logits[None], labels[None], jnp.array([2]), jnp.array([3])))
+    assert loss > 1e20
+
+
+def test_gradient_is_finite():
+    logits, labels = _rand_case(jax.random.key(2), 8, 5, 3)
+    g = jax.grad(
+        lambda lg: ctc_loss(lg[None], labels[None], jnp.array([8]), jnp.array([3]))
+    )(logits)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # CTC gradient wrt logits sums to ~0 per frame (softmax property)
+    np.testing.assert_allclose(np.asarray(jnp.sum(g, -1)), 0.0, atol=1e-5)
+
+
+def test_greedy_decode_collapses():
+    # path: blank a a blank b -> [a, b]
+    v = 3
+    path = [0, 1, 1, 0, 2]
+    logits = jax.nn.one_hot(jnp.array(path), v)[None] * 10
+    out = greedy_decode(logits, jnp.array([5]))
+    assert out == [[1, 2]]
+
+
+def test_edit_distance_and_per():
+    assert edit_distance([1, 2, 3], [1, 2, 3]) == 0
+    assert edit_distance([1, 2, 3], [1, 3]) == 1
+    assert edit_distance([], [1, 2]) == 2
+    assert phone_error_rate([[1, 2]], [[1, 2, 3]]) == pytest.approx(1 / 3)

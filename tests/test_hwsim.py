@@ -1,0 +1,105 @@
+"""Hardware-model validation against the paper's published numbers."""
+import numpy as np
+import pytest
+
+from repro.hwsim.memory import FetchModel, fig14_table, weight_bits_per_frame
+from repro.hwsim.spartus_model import (
+    EDGE_SPARTUS,
+    SPARTUS,
+    TEST_LAYER,
+    blen,
+    comparison_table,
+    dense_baseline,
+    evaluate,
+    step_cycles_from_masks,
+    table4_ladder,
+)
+
+
+def test_eq9_peak_throughput():
+    assert SPARTUS.peak_ops() / 1e9 == pytest.approx(204.8)   # Table V
+    assert EDGE_SPARTUS.peak_ops() / 1e9 == pytest.approx(1.0)  # Table VI
+
+
+def test_test_layer_matches_table5_params():
+    # Table V: #Parameters 4.70 M
+    assert TEST_LAYER.dense_macs == pytest.approx(4.70e6, rel=0.01)
+
+
+def test_dense_baseline_46us():
+    # Sec. VIII: "theoretical peak ... runs a dense LSTM layer with 1024
+    # neurons in 46 us"
+    rep = dense_baseline(SPARTUS, TEST_LAYER)
+    assert rep.latency_us == pytest.approx(46.0, rel=0.05)
+
+
+def test_blen_matches_paper():
+    # H=4096, M=64, gamma=93.75% -> BLEN=4 (Alg. 3)
+    assert blen(SPARTUS, TEST_LAYER, 0.9375) == 4
+
+
+def test_table4_ladder_reproduced():
+    """Paper Table IV (Spartus column), modelled within ~20%:
+       no-opt >46 us; +CBTD 3.3 us; +Delta(0.1) 1.6 us; +Delta(0.3) 1.0 us."""
+    ladder = table4_ladder()
+    assert ladder["no_opt"].latency_us == pytest.approx(46.0, rel=0.05)
+    assert ladder["cbtd"].latency_us == pytest.approx(3.3, rel=0.25)
+    assert ladder["delta_0.1"].latency_us == pytest.approx(1.6, rel=0.25)
+    assert ladder["delta_0.3"].latency_us == pytest.approx(1.0, rel=0.25)
+    # headline: ~9.4 TOp/s effective batch-1 throughput, ~46x speedup
+    eff = ladder["delta_0.3"].batch1_throughput_gops
+    assert eff == pytest.approx(9447.8, rel=0.25)
+    speedup = ladder["no_opt"].latency_us / ladder["delta_0.3"].latency_us
+    assert speedup == pytest.approx(46.0, rel=0.25)
+
+
+def test_trace_driven_matches_analytic():
+    rng = np.random.default_rng(0)
+    t, f = 200, TEST_LAYER.n_cols + 1  # padded to 1148 cols internally
+    ts = 0.9
+    masks = rng.random((200, TEST_LAYER.n_cols)) > ts
+    cyc = step_cycles_from_masks(SPARTUS, TEST_LAYER, 0.9375, masks)
+    rep = evaluate(SPARTUS, TEST_LAYER, 0.9375, delta_masks=masks)
+    # iid masks are nearly balanced -> close to analytic at BR~0.9
+    rep_a = evaluate(SPARTUS, TEST_LAYER, 0.9375, temporal_sparsity=ts,
+                     balance_ratio=0.9)
+    assert rep.latency_us == pytest.approx(rep_a.latency_us, rel=0.15)
+
+
+def test_edge_spartus_bandwidth_bound():
+    """Edge-Spartus fetches weights off-chip: Table VI latency 121.7 us at
+    ts=82.56%, gamma=93.75%."""
+    rep = evaluate(EDGE_SPARTUS, TEST_LAYER, 0.9375, temporal_sparsity=0.8256,
+                   balance_ratio=1.0)  # N=1: single array is always balanced
+    assert rep.latency_us == pytest.approx(121.7, rel=0.35)
+    assert rep.batch1_throughput_gops == pytest.approx(77.3, rel=0.35)
+
+
+def test_comparison_table_ratios():
+    ladder = table4_ladder()
+    table = comparison_table(ladder["delta_0.3"], power_w=8.4)
+    # paper: 4x higher batch-1 effective throughput than BBS
+    assert table["BBS"]["throughput_ratio"] == pytest.approx(4.0, rel=0.3)
+    # ~8x higher effective throughput than DeltaRNN
+    assert table["DeltaRNN"]["throughput_ratio"] == pytest.approx(8.0, rel=0.3)
+    # ~1.1 TOp/s/W wall-power efficiency
+    assert table["ours"]["power_eff_gopsw"] == pytest.approx(1124.7, rel=0.3)
+
+
+def test_dram_energy_reduction():
+    """Sec. VII-C: 'DRAM access energy can be reduced by 91.7x'."""
+    n_weights = TEST_LAYER.dense_macs
+    tbl = fig14_table(n_weights, gamma=0.9375, temporal_sparsity=0.8256)
+    # (1/((1-g)(1-ts))) / index-overhead = 91.7x against 8-bit dense
+    assert tbl["reduction"]["dense_over_st"] == pytest.approx(91.7, rel=0.2)
+    # DDR3L row dominates HBM2 by the Table VII energy ratio
+    assert (tbl["DDR3L"]["dense_uj"] / tbl["HBM2"]["dense_uj"]
+            == pytest.approx(16.5 / 3.9, rel=0.01))
+
+
+def test_sparsity_monotone_latency():
+    lat = [
+        evaluate(SPARTUS, TEST_LAYER, 0.9375, ts).latency_us
+        for ts in [0.0, 0.5, 0.74, 0.9]
+    ]
+    assert lat == sorted(lat, reverse=True)

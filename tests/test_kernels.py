@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(kernel bodies execute on CPU; BlockSpec tiling semantics fully exercised).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apply_cbtd, blen_for, cbcsc_decode, cbcsc_encode
+from repro.kernels import ops, ref
+from repro.kernels.delta_encode import delta_encode_pallas
+from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
+from repro.kernels.stsp_spmv import stsp_spmv_pallas
+
+TOL = {jnp.float32: dict(rtol=1e-6, atol=1e-6),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# -- delta_encode -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("f", [1024, 2048, 8192])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("theta", [0.0, 0.1, 0.5])
+def test_delta_encode_kernel(f, dtype, theta):
+    k1, k2 = jax.random.split(jax.random.key(f + int(theta * 10)))
+    x = jax.random.normal(k1, (f,), dtype)
+    x_hat = x + jax.random.normal(k2, (f,), dtype) * 0.2
+    d, xh, nnz = delta_encode_pallas(x, x_hat, theta, interpret=True)
+    d_ref, xh_ref, nnz_ref = ref.delta_encode_ref(x, x_hat, theta)
+    np.testing.assert_allclose(np.asarray(d, np.float32),
+                               np.asarray(d_ref, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(xh, np.float32),
+                               np.asarray(xh_ref, np.float32), **TOL[dtype])
+    assert int(jnp.sum(nnz)) == int(nnz_ref)
+
+
+def test_delta_encode_wrapper_pads_ragged():
+    x = jax.random.normal(jax.random.key(0), (1147,))
+    x_hat = jnp.zeros((1147,))
+    d, xh, nnz = ops.delta_encode(x, x_hat, 0.3, use_pallas=True)
+    d_ref, xh_ref, nnz_ref = ref.delta_encode_ref(x, x_hat, 0.3)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-6)
+    assert int(nnz) == int(nnz_ref)
+    assert d.shape == (1147,)
+
+
+# -- lstm_pointwise ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", [512, 1024, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_pointwise_kernel(h, dtype):
+    k1, k2 = jax.random.split(jax.random.key(h))
+    dm = jax.random.normal(k1, (4, h), dtype)
+    c = jax.random.normal(k2, (h,), dtype)
+    hh, cc = lstm_pointwise_pallas(dm, c, interpret=True)
+    h_ref, c_ref = ref.lstm_pointwise_ref(dm, c)
+    np.testing.assert_allclose(np.asarray(hh, np.float32),
+                               np.asarray(h_ref, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(cc, np.float32),
+                               np.asarray(c_ref, np.float32), **TOL[dtype])
+
+
+def test_lstm_pointwise_wrapper_ragged():
+    dm = jax.random.normal(jax.random.key(1), (4, 700))
+    c = jax.random.normal(jax.random.key(2), (700,))
+    hh, cc = ops.lstm_pointwise(dm, c, use_pallas=True)
+    h_ref, c_ref = ref.lstm_pointwise_ref(dm, c)
+    np.testing.assert_allclose(np.asarray(hh), np.asarray(h_ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+# -- stsp_spmv --------------------------------------------------------------
+
+
+def _cbcsc_case(seed, h, q, m, gamma):
+    w = apply_cbtd(
+        jax.random.normal(jax.random.key(seed), (h, q)) + 0.01, gamma, m, 1.0
+    )
+    return w, cbcsc_encode(w, m, blen=blen_for(h, m, gamma))
+
+
+@pytest.mark.parametrize("h,q,m,gamma,k", [
+    (64, 32, 8, 0.75, 8),
+    (128, 96, 16, 0.9, 16),
+    (256, 128, 32, 0.5, 32),
+    (512, 256, 64, 0.94, 24),
+])
+def test_stsp_spmv_kernel_vs_dense(h, q, m, gamma, k):
+    w, enc = _cbcsc_case(h + q, h, q, m, gamma)
+    kd, kv = jax.random.split(jax.random.key(k))
+    idx = jax.random.permutation(kd, q)[:k].astype(jnp.int32)
+    ds_vals = jax.random.normal(kv, (k,))
+    y = stsp_spmv_pallas(enc.val, enc.lidx, idx, ds_vals, s=enc.s, interpret=True)
+    # dense oracle: sparse delta vector through the dense pruned matrix
+    ds = jnp.zeros((q,)).at[idx].set(ds_vals)
+    y_dense = w @ ds
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    # and vs the jnp oracle of the kernel math:
+    y_ref = ref.stsp_spmv_ref(enc.val, enc.lidx, idx, ds_vals, enc.s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stsp_spmv_padding_is_noop():
+    w, enc = _cbcsc_case(7, 64, 32, 8, 0.75)
+    idx = jnp.array([3, 10, 0, 0], jnp.int32)   # 2 padded slots pointing at col 0
+    ds_vals = jnp.array([1.0, -2.0, 0.0, 0.0])
+    y = stsp_spmv_pallas(enc.val, enc.lidx, idx, ds_vals, s=enc.s, interpret=True)
+    y_expect = w[:, 3] * 1.0 + w[:, 10] * (-2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stsp_spmv_duplicate_indices_accumulate():
+    w, enc = _cbcsc_case(9, 64, 32, 8, 0.5)
+    idx = jnp.array([5, 5], jnp.int32)
+    ds_vals = jnp.array([1.0, 1.0])
+    y = stsp_spmv_pallas(enc.val, enc.lidx, idx, ds_vals, s=enc.s, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(2.0 * w[:, 5]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stsp_spmv_dtypes(dtype):
+    w, enc = _cbcsc_case(11, 128, 64, 16, 0.75)
+    enc_t = type(enc)(val=enc.val.astype(dtype), lidx=enc.lidx, valid=enc.valid,
+                      h=enc.h, m=enc.m, blen=enc.blen)
+    idx = jnp.arange(12, dtype=jnp.int32)
+    ds_vals = jax.random.normal(jax.random.key(1), (12,), dtype)
+    y = stsp_spmv_pallas(enc_t.val, enc_t.lidx, idx, ds_vals, s=enc.s,
+                         interpret=True)
+    y_ref = ref.stsp_spmv_ref(enc_t.val, enc_t.lidx, idx, ds_vals, enc.s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL[dtype])
+
+
+# -- wrapper-level integration ----------------------------------------------
+
+
+def test_select_active_columns_basic():
+    delta = jnp.array([0.0, 0.5, 0.0, -2.0, 0.1, 0.0])
+    idx, vals, dropped = ops.select_active_columns(delta, capacity=4)
+    got = sorted((int(i), float(v)) for i, v in zip(idx, vals) if v != 0)
+    assert [g[0] for g in got] == [1, 3, 4]
+    assert [g[1] for g in got] == pytest.approx([0.5, -2.0, 0.1])
+    assert int(dropped) == 0
+
+
+def test_select_active_columns_overflow_keeps_largest():
+    delta = jnp.array([0.1, -0.9, 0.5, 0.0, 0.3])
+    idx, vals, dropped = ops.select_active_columns(delta, capacity=2)
+    kept = {int(i) for i, v in zip(idx, vals) if v != 0}
+    assert kept == {1, 2}          # two largest magnitudes
+    assert int(dropped) == 2       # 0.1 and 0.3 dropped
+
+
+def test_full_delta_step_via_kernels_matches_dense():
+    """End-to-end single DeltaLinear step through the kernel trio equals the
+    dense masked computation: encode -> select -> stsp_spmv."""
+    h, q, m, gamma = 128, 96, 16, 0.75
+    w, enc = _cbcsc_case(21, h, q, m, gamma)
+    x = jax.random.normal(jax.random.key(22), (q,))
+    x_hat = x + jax.random.normal(jax.random.key(23), (q,)) * 0.3
+    theta = 0.2
+
+    delta, new_xh, nnz = ops.delta_encode(x, x_hat, theta, use_pallas=True)
+    idx, vals, dropped = ops.select_active_columns(delta, capacity=q)
+    assert int(dropped) == 0
+    y = ops.stsp_spmv(enc.val, enc.lidx, idx, vals, s=enc.s, use_pallas=True)
+
+    d_ref, _, _ = ref.delta_encode_ref(x, x_hat, theta)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(w @ d_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_xla_and_pallas_paths_agree():
+    w, enc = _cbcsc_case(31, 256, 128, 32, 0.9)
+    idx = jnp.arange(20, dtype=jnp.int32) * 3
+    vals = jax.random.normal(jax.random.key(3), (20,))
+    y_p = ops.stsp_spmv(enc.val, enc.lidx, idx, vals, s=enc.s, use_pallas=True)
+    y_x = ops.stsp_spmv(enc.val, enc.lidx, idx, vals, s=enc.s, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_x), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_dense_gather_path():
+    w = jax.random.normal(jax.random.key(5), (64, 32))
+    idx = jnp.array([1, 5, 9], jnp.int32)
+    vals = jnp.array([0.5, -1.0, 2.0])
+    y = ops.delta_spmv_dense_gather(w, idx, vals)
+    ds = jnp.zeros((32,)).at[idx].set(vals)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(w @ ds), rtol=1e-6)

@@ -1,0 +1,65 @@
+"""Roofline analyzer units: HLO collective parsing + term arithmetic."""
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes, _shape_bytes, model_flops,
+)
+from repro.models.config import SHAPES
+from repro.configs import get_arch
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,4096,896]{2,1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[256,1024]{1,0} all-reduce(%p1), replica_groups=[32,8]<=[256], to_apply=%add
+  %rs = f32[8,128]{1,0} reduce-scatter(%p2), replica_groups={{0,1}}, dimensions={0}
+  %a2a = bf16[64,64]{1,0} all-to-all(%p3), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = u8[1024]{0} collective-permute(%p4), source_target_pairs={{0,1}}
+  %tup = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-reduce(%p5, %p6), replica_groups={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096,896]") == 16 * 4096 * 896 * 2
+    assert _shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+
+
+def test_collective_parse_and_ring_model():
+    total, kinds = collective_bytes(HLO, n_devices=256)
+    ag = 16 * 4096 * 896 * 2 * (3 / 4)            # group of 4
+    ar = 2 * 256 * 1024 * 4 * (7 / 8)             # iota groups of 8
+    rs = 8 * 128 * 4 * 1                           # group of 2: r*(n-1)
+    a2a = 64 * 64 * 2 * (7 / 8)
+    cp = 1024
+    tup = 2 * (16 + 16) * (1 / 2)
+    assert kinds["all-gather"] == pytest.approx(ag)
+    assert kinds["all-reduce"] == pytest.approx(ar + tup)
+    assert kinds["reduce-scatter"] == pytest.approx(rs)
+    assert kinds["all-to-all"] == pytest.approx(a2a)
+    assert kinds["collective-permute"] == pytest.approx(cp)
+    assert total == pytest.approx(ag + ar + rs + a2a + cp + tup)
+
+
+def test_group_size_defaults_to_world():
+    total, kinds = collective_bytes(
+        "%x = f32[4]{0} all-reduce(%p), to_apply=%add\n", n_devices=4
+    )
+    assert kinds["all-reduce"] == pytest.approx(2 * 16 * (3 / 4))
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("qwen3-1.7b")
+    cells = {c.name: c for c in SHAPES}
+    n = 2_000_000_000
+    head = cfg.vocab * cfg.d_model
+    train = model_flops(cfg, cells["train_4k"], n)
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    pre = model_flops(cfg, cells["prefill_32k"], n)
+    assert pre == pytest.approx(2 * (n - head) * 32 * 32768 + 2 * head * 32)
+    dec = model_flops(cfg, cells["decode_32k"], n)
+    assert dec == pytest.approx(2 * n * 128)
+
+
+def test_constants_match_assignment():
+    assert PEAK_FLOPS == 197e12 and HBM_BW == 819e9 and ICI_BW == 50e9

@@ -1,0 +1,164 @@
+"""Integration: synthetic data pipeline, trainer (pretrain+retrain),
+checkpoint/restart fault tolerance, optimizer."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree_weight_sparsity
+from repro.data.speech import SpeechConfig, SpeechDataset, make_batch, class_means
+from repro.data.lm import LMConfig, LMDataset
+from repro.models import lstm_am
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, schedule_fn
+from repro.training.trainer import (
+    TrainConfig,
+    evaluate_per,
+    measure_delta_stats,
+    pretrain_retrain,
+    train,
+)
+
+SMALL = TrainConfig(
+    model=lstm_am.LSTMAMConfig(input_dim=123, hidden_dim=32, n_layers=2,
+                               n_classes=41),
+    data=SpeechConfig(max_frames=48, n_classes=40),
+    opt=AdamWConfig(lr=3e-3),
+    batch_size=8,
+    steps_per_epoch=10,
+    cbtd_gamma=0.75,
+    cbtd_m=4,
+    cbtd_delta_alpha=0.5,  # reach target sparsity after 2 epochs
+)
+
+
+def test_speech_batch_shapes_and_smoothness():
+    cfg = SpeechConfig(max_frames=64)
+    feats, feat_lens, labels, label_lens = make_batch(
+        jax.random.key(0), cfg, 4, class_means(cfg)
+    )
+    assert feats.shape == (4, 64, 123)
+    assert bool(jnp.all(feat_lens >= 32)) and bool(jnp.all(feat_lens <= 64))
+    assert bool(jnp.all(label_lens >= 1))
+    assert bool(jnp.all((labels >= 0) & (labels <= cfg.n_classes)))
+    # temporal smoothness: one-step delta of static features is much smaller
+    # than the feature scale (this is what gives delta sparsity)
+    static = feats[..., :41]
+    diffs = jnp.abs(jnp.diff(static, axis=1))
+    assert float(jnp.mean(diffs)) < 0.5 * float(jnp.std(static))
+
+
+def test_dataset_determinism_and_sharding():
+    cfg = SpeechConfig(max_frames=32)
+    a = next(SpeechDataset(cfg, 4, process_index=0))
+    b = next(SpeechDataset(cfg, 4, process_index=0))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    c = next(SpeechDataset(cfg, 4, process_index=1))
+    assert not np.allclose(np.asarray(a[0]), np.asarray(c[0]))
+    # resume mid-stream
+    ds = SpeechDataset(cfg, 4)
+    next(ds)
+    state = ds.state_dict()
+    x1 = next(ds)
+    ds2 = SpeechDataset(cfg, 4)
+    ds2.load_state_dict(state)
+    x2 = next(ds2)
+    np.testing.assert_array_equal(np.asarray(x1[0]), np.asarray(x2[0]))
+
+
+def test_lm_dataset():
+    ds = LMDataset(LMConfig(vocab=128, seq_len=16), 4)
+    tok, tgt = next(ds)
+    assert tok.shape == (4, 16) and tgt.shape == (4, 16)
+    np.testing.assert_array_equal(np.asarray(tok[:, 1:]), np.asarray(tgt[:, :-1]))
+    assert int(jnp.max(tok)) < 128
+
+
+def test_loss_decreases_and_sparsity_reached():
+    res = train(SMALL, epochs=3)
+    first = np.mean(res.losses[:5])
+    last = np.mean(res.losses[-5:])
+    assert last < first, f"loss did not decrease: {first} -> {last}"
+    ws = tree_weight_sparsity(
+        {"w_x": [l["w_x"] for l in res.params["lstm"]],
+         "w_h": [l["w_h"] for l in res.params["lstm"]],
+         "fcl": res.params["fcl"]["w"]}
+    )
+    # gamma=0.75, subcolumn len 32/4=8 -> drop 6/8 = 75%
+    assert ws == pytest.approx(0.75, abs=0.01)
+    # logit layer untouched
+    assert float(jnp.mean(res.params["logit"]["w"] == 0)) < 0.01
+
+
+def test_pretrain_retrain_pipeline():
+    pre, post, retrain_cfg = pretrain_retrain(
+        SMALL, pretrain_epochs=2, retrain_epochs=1, theta=0.05
+    )
+    assert retrain_cfg.model.delta and retrain_cfg.model.theta == 0.05
+    assert np.isfinite(post.final_loss)
+    # delta stats are measurable on the retrained model
+    ds = SpeechDataset(SMALL.data, 4)
+    stats = measure_delta_stats(post.params, retrain_cfg, ds, n_batches=1)
+    assert 0.0 <= stats["layer0"]["temporal_sparsity"] <= 1.0
+    # hidden-state deltas should show some sparsity even at small theta
+    assert stats["layer1"]["temporal_sparsity_dh"] > 0.05
+
+
+def test_per_evaluation_runs():
+    res = train(SMALL, epochs=1)
+    per = evaluate_per(res.params, SMALL, SpeechDataset(SMALL.data, 8), n_batches=1)
+    assert 0.0 <= per <= 1.5  # PER can exceed 1 with insertions
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = dataclasses.replace(SMALL, ckpt_dir=str(tmp_path / "ck"), ckpt_every=5)
+    full = train(cfg, epochs=2, resume=False)
+    # simulate preemption: run 1 epoch (10 steps), kill, resume to 2 epochs
+    cfg2 = dataclasses.replace(cfg, ckpt_dir=str(tmp_path / "ck2"))
+    train(cfg2, epochs=1, resume=False)
+    resumed = train(cfg2, epochs=2, resume=True)
+    # resumed run continued (step count completes to 20, not restarted at 0)
+    assert resumed.steps == 20
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(resumed.params)[0]),
+        np.asarray(jax.tree.leaves(full.params)[0]),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_checkpoint_manager_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, process_index=0,
+                            async_save=False)
+    tree = {"w": jnp.arange(4.0)}
+    for s in [1, 2, 3]:
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [2, 3]  # retention
+    # incomplete checkpoint (no COMMIT) is ignored
+    os.makedirs(tmp_path / "step_000000009")
+    assert mgr.latest_step() == 3
+    restored, meta = mgr.restore(3, {"w": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(4.0))
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, clip_norm=None)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.05
+
+
+def test_schedules():
+    cfg = AdamWConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                      total_steps=110, min_lr_frac=0.1)
+    fn = schedule_fn(cfg)
+    assert float(fn(jnp.array(0))) == 0.0
+    assert float(fn(jnp.array(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.array(110))) == pytest.approx(0.1)
+    mid = float(fn(jnp.array(60)))
+    assert 0.1 < mid < 1.0
