@@ -1,0 +1,129 @@
+"""Load-generator benchmark for the continuous-batching serving subsystem.
+
+Compares aggregate throughput (frames/s) and per-request latency (p50/p95)
+of the `SessionPool` scheduler at several batch capacities against the
+baseline of running the same requests *sequentially* through the batch-1
+`SpartusEngine`, and verifies that the pooled per-request logits are
+identical (atol 1e-5) to the batch-1 engine's.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py
+    PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate:
+        fail unless capacity-16 aggregate frames/s >= 4x sequential
+
+Runs on CPU: the batch-1 engine pays ~8 XLA dispatches + 3 host syncs per
+(frame, layer) while the pool amortises one dispatch + one logits fetch
+across all slots per tick — the speedup below is that dispatch economy,
+before any accelerator parallelism.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lstm_am
+from repro.serving import (
+    BatchedSpartusEngine, EngineConfig, SpartusEngine, StreamRequest,
+    serve_requests,
+)
+
+
+def build_model(hidden: int, n_layers: int, input_dim: int, n_classes: int,
+                gamma: float, m: int, seed: int = 0):
+    cfg = lstm_am.LSTMAMConfig(input_dim=input_dim, hidden_dim=hidden,
+                               n_layers=n_layers, n_classes=n_classes)
+    params = lstm_am.init_params(jax.random.key(seed), cfg)
+    return lstm_am.cbtd_prune_stacks(params, gamma=gamma, m=m), cfg
+
+
+def make_requests(n: int, frames: int, input_dim: int,
+                  arrival_stride: int = 0) -> List[StreamRequest]:
+    return [
+        StreamRequest(
+            req_id=i, arrival_step=i * arrival_stride,
+            feats=np.asarray(
+                jax.random.normal(jax.random.key(100 + i), (frames, input_dim)),
+                np.float32))
+        for i in range(n)
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--input-dim", type=int, default=40)
+    ap.add_argument("--classes", type=int, default=41)
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--capacities", default="1,4,16")
+    ap.add_argument("--theta", type=float, default=0.05)
+    ap.add_argument("--gamma", type=float, default=0.9375)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--capacity-frac", type=float, default=0.5)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless capacity-16 (or max capacity) hits "
+                         ">=4x sequential frames/s with matching logits")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    params, cfg = build_model(args.hidden, args.layers, args.input_dim,
+                              args.classes, args.gamma, args.m)
+    ecfg = EngineConfig(theta=args.theta, gamma=args.gamma, m=args.m,
+                        capacity_frac=args.capacity_frac)
+    e1 = SpartusEngine(params, cfg, ecfg)
+    eb = BatchedSpartusEngine(params, cfg, ecfg)
+    reqs = make_requests(args.requests, args.frames, args.input_dim)
+    total_frames = args.requests * args.frames
+
+    # -- sequential batch-1 baseline ----------------------------------------
+    warm = jnp.asarray(reqs[0].feats[:2])
+    e1.run_utterance(warm)  # compile
+    e1.telemetry.clear()
+    t0 = time.perf_counter()
+    seq_logits = [np.asarray(e1.run_utterance(jnp.asarray(r.feats)))
+                  for r in reqs]
+    t_seq = time.perf_counter() - t0
+    seq_fps = total_frames / t_seq
+    report = {"sequential": {"frames_per_s": seq_fps, "wall_s": t_seq}}
+    print(f"[bench] sequential batch-1: {args.requests} x {args.frames} "
+          f"frames in {t_seq:.2f}s -> {seq_fps:.0f} frames/s")
+
+    # -- pooled, per capacity ------------------------------------------------
+    caps = [int(c) for c in args.capacities.split(",")]
+    parity_ok = True
+    for cap in caps:
+        # warm-up compiles the step for this capacity outside the timing:
+        serve_requests(eb, [StreamRequest(0, 0, reqs[0].feats[:2])], cap)
+        results, stats = serve_requests(eb, reqs, capacity=cap)
+        for r in results:
+            if not np.allclose(r.logits, seq_logits[r.req_id], atol=1e-5):
+                parity_ok = False
+                print(f"[bench] PARITY FAIL req {r.req_id} at capacity {cap}")
+        speedup = stats.frames_per_s / seq_fps
+        report[f"capacity_{cap}"] = dict(stats.to_dict(), speedup=speedup)
+        print(f"[bench] capacity {cap:3d}: {stats.frames_per_s:8.0f} frames/s "
+              f"({speedup:4.1f}x)  p50 {stats.p50_latency_s*1e3:7.1f} ms  "
+              f"p95 {stats.p95_latency_s*1e3:7.1f} ms")
+
+    if args.json:
+        print(json.dumps(report, indent=2))
+
+    if args.check:
+        cap = max(caps)
+        speedup = report[f"capacity_{cap}"]["speedup"]
+        ok = parity_ok and speedup >= 4.0
+        print(f"[bench] check: parity={'ok' if parity_ok else 'FAIL'} "
+              f"speedup@{cap}={speedup:.1f}x -> {'PASS' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

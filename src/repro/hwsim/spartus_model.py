@@ -159,6 +159,21 @@ def evaluate(
     )
 
 
+def evaluate_from_telemetry(
+    hw: SpartusHW, dims: LayerDims, gamma: float,
+    sparsity: Dict[str, float], balance_ratio: float = 0.75,
+) -> HWReport:
+    """Model a layer from an *aggregated* telemetry summary — the dict
+    produced by the serving engines' ``measured_sparsity()`` (device-side
+    accumulators, one host fetch), replacing the old per-step-dict flow.
+    Uses ``temporal_sparsity`` and, when present, ``balance_ratio``."""
+    return evaluate(
+        hw, dims, gamma,
+        temporal_sparsity=sparsity.get("temporal_sparsity", 0.0),
+        balance_ratio=sparsity.get("balance_ratio", balance_ratio),
+    )
+
+
 def dense_baseline(hw: SpartusHW, dims: LayerDims) -> HWReport:
     """'No Opt.' row of Table IV: dense MxV on the MAC arrays."""
     cycles = dims.dense_macs / hw.n_macs + hw.overhead_cycles

@@ -107,6 +107,67 @@ def stsp_spmv(
     return stsp_spmv_pallas(val, lidx, idx, ds_vals, s=s, interpret=interpret)
 
 
+# -- batched (slot-dimension) entry points ---------------------------------
+#
+# The serving scheduler advances a whole pool of independent streaming
+# sessions per frame (serving/batched_engine.py).  These wrappers vmap the
+# scalar-session kernels over a leading slot dimension B so one jitted call
+# covers the entire pool; weights broadcast (in_axes=None), per-slot state
+# maps.  Numerics per row are identical to the unbatched calls (vmap only
+# changes the iteration structure), which is what makes the batched engine
+# bit-comparable to `SpartusEngine`.
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def delta_encode_batch(
+    x: jax.Array, x_hat: jax.Array, theta,
+    *, use_pallas: bool = False, interpret: bool = True,
+):
+    """Batched eqs. (4)-(5).  x, x_hat: [B, F] -> (delta [B, F],
+    new_x_hat [B, F], nnz [B] int32)."""
+    fn = functools.partial(delta_encode, use_pallas=use_pallas,
+                           interpret=interpret)
+    return jax.vmap(fn, in_axes=(0, 0, None))(x, x_hat, theta)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def select_active_columns_batch(
+    delta: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched NZI/NZV list builder.  delta: [B, F] ->
+    (idx [B, K] int32, vals [B, K], n_dropped [B])."""
+    fn = functools.partial(select_active_columns, capacity=capacity)
+    return jax.vmap(fn)(delta)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "use_pallas", "interpret"))
+def stsp_spmv_batch(
+    val: jax.Array,
+    lidx: jax.Array,
+    idx: jax.Array,
+    ds_vals: jax.Array,
+    *,
+    s: int,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched STSP SpMxSpV: shared CBCSC weights, per-slot active lists.
+    idx, ds_vals: [B, K] -> y [B, H]."""
+    fn = functools.partial(stsp_spmv, s=s, use_pallas=use_pallas,
+                           interpret=interpret)
+    return jax.vmap(fn, in_axes=(None, None, 0, 0))(val, lidx, idx, ds_vals)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lstm_pointwise_batch(
+    dm: jax.Array, c: jax.Array, *, use_pallas: bool = False, interpret: bool = True
+):
+    """Batched HPE gate math.  dm: [B, 4, H], c: [B, H] -> (h, c') [B, H]."""
+    fn = functools.partial(lstm_pointwise, use_pallas=use_pallas,
+                           interpret=interpret)
+    return jax.vmap(fn)(dm, c)
+
+
 def delta_spmv_dense_gather(
     w: jax.Array, idx: jax.Array, ds_vals: jax.Array
 ) -> jax.Array:

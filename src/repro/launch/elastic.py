@@ -22,7 +22,7 @@ from typing import Optional, Tuple
 import jax
 
 from repro.distributed.sharding import param_specs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import compat_make_mesh, make_production_mesh
 
 
 def best_mesh_for(n_devices: int):
@@ -32,10 +32,7 @@ def best_mesh_for(n_devices: int):
     while n_devices % model:
         model //= 2
     data = n_devices // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def reshard(tree, mesh, cfg=None):

@@ -15,20 +15,33 @@ from typing import Tuple
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across the 0.4 -> 0.5+ API change: newer releases take
+    (and want) ``axis_types``; 0.4.x has neither the kwarg nor AxisType."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh``: jax.set_mesh on 0.5+, the Mesh
+    object itself (a context manager) on 0.4.x."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh over host devices (tests; needs XLA_FLAGS device count)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat_make_mesh((n_data, n_model), ("data", "model"))
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

@@ -1,9 +1,11 @@
 """Serving launcher: batched decode for any --arch, or the paper's
-streaming Spartus engine for the LSTM AM.
+streaming Spartus engine for the LSTM AM (batch-1, or the
+continuous-batching session pool with --pool N).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --steps 32
     PYTHONPATH=src python -m repro.launch.serve --spartus --theta 0.2
+    PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --requests 24
 """
 from __future__ import annotations
 
@@ -46,9 +48,14 @@ def serve_arch(args):
 
 
 def serve_spartus(args):
+    import numpy as np
+
     from repro.data.speech import SpeechConfig, SpeechDataset
     from repro.models import lstm_am
-    from repro.serving.engine import EngineConfig, SpartusEngine
+    from repro.serving import (
+        BatchedSpartusEngine, EngineConfig, SpartusEngine, StreamRequest,
+        serve_requests,
+    )
     from repro.training.trainer import TrainConfig, pretrain_retrain
     from repro.training.optimizer import AdamWConfig
 
@@ -61,9 +68,39 @@ def serve_spartus(args):
     )
     print("[serve] training a small CBTD+DeltaLSTM AM first ...")
     pre, post, rcfg = pretrain_retrain(cfg, 2, 1, theta=args.theta)
-    engine = SpartusEngine(post.params, rcfg.model,
-                           EngineConfig(theta=args.theta, gamma=args.gamma,
-                                        m=8))
+    ecfg = EngineConfig(theta=args.theta, gamma=args.gamma, m=8)
+    from repro.hwsim import spartus_model as hw
+
+    if args.pool > 0:
+        engine = BatchedSpartusEngine(post.params, rcfg.model, ecfg)
+        n_req = max(args.requests, 1)
+        data = SpeechDataset(cfg.data, n_req)
+        feats, n_frames, *_ = next(data)
+        reqs = [
+            StreamRequest(
+                req_id=i, arrival_step=2 * i,
+                feats=np.asarray(feats[i, :max(int(n_frames[i]), 8)],
+                                 np.float32))
+            for i in range(n_req)
+        ]
+        results, stats = serve_requests(engine, reqs, capacity=args.pool)
+        print(f"[serve] pool({args.pool}): {stats.n_requests} sessions / "
+              f"{stats.total_frames} frames in {stats.wall_s:.2f}s -> "
+              f"{stats.frames_per_s:.0f} frames/s, latency "
+              f"p50 {stats.p50_latency_s*1e3:.0f} ms / "
+              f"p95 {stats.p95_latency_s*1e3:.0f} ms")
+        sp = stats.sparsity
+        print(f"[serve] temporal sparsity {sp['temporal_sparsity']:.1%}, "
+              f"weight sparsity {engine.weight_sparsity():.1%}, "
+              f"overflow {sp['capacity_overflow_rate']:.1%}")
+        rep = hw.evaluate_from_telemetry(hw.SPARTUS, hw.TEST_LAYER,
+                                         args.gamma, sp)
+        print(f"[serve] modelled Spartus latency at this sparsity: "
+              f"{rep.latency_us:.2f} us "
+              f"({rep.batch1_throughput_gops:.0f} GOp/s effective)")
+        return
+
+    engine = SpartusEngine(post.params, rcfg.model, ecfg)
     feats, *_ = next(SpeechDataset(cfg.data, 1))
     t0 = time.time()
     logits = engine.run_utterance(feats[0])
@@ -73,9 +110,7 @@ def serve_spartus(args):
           f"temporal sparsity {sp['temporal_sparsity']:.1%}, "
           f"weight sparsity {engine.weight_sparsity():.1%}, "
           f"overflow {sp['capacity_overflow_rate']:.1%}")
-    from repro.hwsim import spartus_model as hw
-    rep = hw.evaluate(hw.SPARTUS, hw.TEST_LAYER, args.gamma,
-                      sp["temporal_sparsity"], 0.75)
+    rep = hw.evaluate_from_telemetry(hw.SPARTUS, hw.TEST_LAYER, args.gamma, sp)
     print(f"[serve] modelled Spartus latency for the paper's test layer at "
           f"this sparsity: {rep.latency_us:.2f} us "
           f"({rep.batch1_throughput_gops:.0f} GOp/s effective)")
@@ -92,6 +127,10 @@ def main():
     ap.add_argument("--theta", type=float, default=0.2)
     ap.add_argument("--gamma", type=float, default=0.75)
     ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--pool", type=int, default=0,
+                    help="session-pool capacity (0 = batch-1 engine)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="number of streaming requests for --pool mode")
     args = ap.parse_args()
     if args.spartus:
         serve_spartus(args)

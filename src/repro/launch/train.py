@@ -28,6 +28,7 @@ from repro.core import alpha_at, cbtd_prune_tree
 from repro.data.lm import LMConfig, LMDataset
 from repro.distributed.sharding import batch_specs, param_specs
 from repro.launch.elastic import best_mesh_for
+from repro.launch.mesh import mesh_context
 from repro.launch.steps import make_train_step
 from repro.models import api
 from repro.training.checkpoint import CheckpointManager
@@ -104,7 +105,7 @@ def main():
                        out_shardings=(p_sh, o_sh, None),
                        donate_argnums=(0, 1))
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         t0 = time.time()
         for step in range(step0, args.steps):
             tokens, targets = next(data)

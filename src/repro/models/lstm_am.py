@@ -15,12 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    apply_cbtd,
     delta_lstm_layer,
     fake_quant_act_ste,
     fake_quant_ste,
     init_delta_lstm_state,
     init_lstm_params,
     lstm_layer,
+    stacked_weight_matrix,
     QuantConfig,
 )
 
@@ -119,6 +121,22 @@ def forward(
     x = _maybe_quant_act(x, cfg)
     logits = x @ params["logit"]["w"].T + params["logit"]["b"]
     return logits, aux
+
+
+def cbtd_prune_stacks(params: Params, gamma: float, m: int) -> Params:
+    """CBTD-prune every LSTM layer's stacked [4H, D+H] matrix (the exact
+    matrix the serving engines CBCSC-pack) and split it back into
+    w_x / w_h.  Returns new params; fcl/logit pass through untouched.
+    Used by benchmarks/examples/tests that need a servable (column-
+    balanced) model without running the full pretrain/retrain loop."""
+    out = dict(params)
+    layers = []
+    for lp in params["lstm"]:
+        w = apply_cbtd(stacked_weight_matrix(lp), gamma=gamma, m=m)
+        d = lp["w_x"].shape[1]
+        layers.append({**lp, "w_x": w[:, :d], "w_h": w[:, d:]})
+    out["lstm"] = layers
+    return out
 
 
 def lstm_weight_layout() -> Dict[str, Any]:

@@ -1,0 +1,21 @@
+"""Serving: the Spartus datapath as an inference service.
+
+- `engine`         — paper-faithful batch-1 streaming engine (SpartusEngine)
+- `batched_engine` — continuous-batching multi-session engine (step_batch)
+- `scheduler`      — SessionPool admission/eviction + serve_requests driver
+- `telemetry`      — device-resident aggregated sparsity counters
+"""
+from repro.serving.batched_engine import (
+    BatchedLayerState,
+    BatchedSpartusEngine,
+    PoolState,
+)
+from repro.serving.engine import EngineConfig, PackedLayer, SpartusEngine
+from repro.serving.scheduler import (
+    RequestResult,
+    ServeStats,
+    SessionPool,
+    StreamRequest,
+    serve_requests,
+)
+from repro.serving.telemetry import TelemetryState, init_telemetry, measured_sparsity

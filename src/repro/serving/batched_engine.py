@@ -1,0 +1,155 @@
+"""Continuous-batching Spartus engine: all pool slots advance one frame
+in a single jitted call.
+
+`SpartusEngine` (engine.py) is the paper-faithful batch-1 datapath: a
+Python loop per frame and per layer with host syncs for telemetry.  This
+module is its server-grade twin: the per-layer state of every session in
+a fixed-capacity pool is stored as stacked device slabs
+(`BatchedLayerState`, shapes `[B, ...]`), and `step_batch` runs
+
+    IPU   delta_encode_batch          (vmap over slots)
+    CTRL  select_active_columns_batch
+    MACs  stsp_spmv_batch             (CBCSC weights broadcast)
+    HPE   lstm_pointwise_batch
+
+for every layer, plus the FCL/logit head, inside one jit.  An `active`
+mask freezes idle slots (their state is carried through unchanged), and
+a `reset` mask re-initialises slots at admission time so attach/detach
+never recompiles.  Telemetry is accumulated on device (telemetry.py) and
+fetched only when `measured_sparsity` is called.
+
+Per-slot numerics are identical to `SpartusEngine`: the batched kernels
+are vmaps of the very same ops, so a session's logits do not depend on
+what the other slots are doing (verified in tests/test_serving_pool.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.lstm_am import LSTMAMConfig
+from repro.serving import telemetry as tele
+from repro.serving.engine import EngineConfig, PackedLayer, PackedSpartusModel
+
+
+class BatchedLayerState(NamedTuple):
+    """Stacked per-slot state of one DeltaLSTM layer."""
+
+    s_hat: jax.Array  # [B, D+H] concatenated x̂ / ĥ references
+    c: jax.Array      # [B, H] cell state
+    h: jax.Array      # [B, H] hidden state
+    dm: jax.Array     # [B, 4H] delta memories
+
+
+class PoolState(NamedTuple):
+    """Full device-resident state of the session pool."""
+
+    layers: Tuple[BatchedLayerState, ...]
+    telemetry: tele.TelemetryState
+
+
+def _fresh_layer_state(layer: PackedLayer, n_slots: int) -> BatchedLayerState:
+    d, h = layer.input_dim, layer.hidden_dim
+    dm0 = jnp.broadcast_to(layer.bias.astype(jnp.float32).reshape(-1),
+                           (n_slots, 4 * h))
+    return BatchedLayerState(
+        s_hat=jnp.zeros((n_slots, d + h), jnp.float32),
+        c=jnp.zeros((n_slots, h), jnp.float32),
+        h=jnp.zeros((n_slots, h), jnp.float32),
+        dm=dm0,
+    )
+
+
+class BatchedSpartusEngine(PackedSpartusModel):
+    """Weight-resident multi-session engine: one CBCSC weight set, B
+    independent streaming sessions multiplexed across it."""
+
+    def __init__(self, am_params: Dict[str, Any], am_cfg: LSTMAMConfig,
+                 cfg: EngineConfig = EngineConfig()):
+        super().__init__(am_params, am_cfg, cfg)
+        self._step = jax.jit(self._step_impl)
+
+    # -- state management ----------------------------------------------------
+
+    def init_state(self, n_slots: int) -> PoolState:
+        return PoolState(
+            layers=tuple(_fresh_layer_state(l, n_slots) for l in self.layers),
+            telemetry=tele.init_telemetry(len(self.layers)),
+        )
+
+    # -- the batched step ----------------------------------------------------
+
+    def _step_impl(
+        self, state: PoolState, x: jax.Array, active: jax.Array,
+        reset: jax.Array,
+    ) -> Tuple[PoolState, jax.Array]:
+        cfg = self.cfg
+        n_slots = x.shape[0]
+        tel = state.telemetry
+        new_layers = []
+        h = x
+        for li, (layer, st) in enumerate(zip(self.layers, state.layers)):
+            # admission-time reset, fused into the step (no extra dispatch):
+            fresh = _fresh_layer_state(layer, n_slots)
+            rm = reset[:, None]
+            st = BatchedLayerState(
+                s_hat=jnp.where(rm, fresh.s_hat, st.s_hat),
+                c=jnp.where(rm, fresh.c, st.c),
+                h=jnp.where(rm, fresh.h, st.h),
+                dm=jnp.where(rm, fresh.dm, st.dm),
+            )
+            s = jnp.concatenate([h, st.h], axis=-1)           # [B, D+H]
+            delta, s_hat, nnz = ops.delta_encode_batch(
+                s, st.s_hat, cfg.theta, use_pallas=cfg.use_pallas
+            )
+            idx, vals, dropped = ops.select_active_columns_batch(
+                delta, layer.capacity
+            )
+            y = ops.stsp_spmv_batch(
+                layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
+                use_pallas=cfg.use_pallas,
+            ).astype(st.dm.dtype)
+            dm = st.dm + y
+            h_new, c_new = ops.lstm_pointwise_batch(
+                dm.reshape(n_slots, 4, layer.hidden_dim), st.c,
+                use_pallas=cfg.use_pallas,
+            )
+            am = active[:, None]
+            new_layers.append(BatchedLayerState(
+                s_hat=jnp.where(am, s_hat, st.s_hat),
+                c=jnp.where(am, c_new, st.c),
+                h=jnp.where(am, h_new, st.h),
+                dm=jnp.where(am, dm, st.dm),
+            ))
+            tel = tele.accumulate(tel, li, nnz, dropped, active)
+            h = h_new
+        h = jax.nn.relu(h @ self.fcl["w"].T + self.fcl["b"])
+        logits = h @ self.logit["w"].T + self.logit["b"]
+        return PoolState(tuple(new_layers), tel), logits
+
+    def step_batch(
+        self, state: PoolState, x: jax.Array, active: jax.Array,
+        reset: jax.Array | None = None,
+    ) -> Tuple[PoolState, jax.Array]:
+        """Advance every active slot one frame.
+
+        x      [B, D]  next input frame per slot (zeros for idle slots)
+        active [B]     slots that consume a frame this tick
+        reset  [B]     slots to re-initialise *before* stepping (admission)
+
+        Returns (new_state, logits [B, n_classes]); logits rows of inactive
+        slots are garbage and must be ignored by the caller.
+        """
+        if reset is None:
+            reset = jnp.zeros(active.shape, bool)
+        return self._step(state, jnp.asarray(x, jnp.float32),
+                          jnp.asarray(active, bool), jnp.asarray(reset, bool))
+
+    # -- telemetry -----------------------------------------------------------
+
+    def measured_sparsity(self, state: PoolState) -> Dict[str, float]:
+        """Single host fetch of the device-resident accumulators."""
+        return tele.measured_sparsity(state.telemetry, self.n_cols)

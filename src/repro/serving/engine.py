@@ -106,8 +106,9 @@ def _step_layer(
     return h_new, stats
 
 
-class SpartusEngine:
-    """Multi-layer streaming engine with per-step sparsity telemetry."""
+class PackedSpartusModel:
+    """CBCSC export + weight accounting shared by the batch-1 engine and
+    the continuous-batching engine (serving/batched_engine.py)."""
 
     def __init__(self, am_params: Dict[str, Any], am_cfg: LSTMAMConfig,
                  cfg: EngineConfig = EngineConfig()):
@@ -116,6 +117,32 @@ class SpartusEngine:
         self.fcl = am_params["fcl"]
         self.logit = am_params["logit"]
         self.am_cfg = am_cfg
+
+    @property
+    def input_dim(self) -> int:
+        return self.layers[0].input_dim
+
+    @property
+    def n_classes(self) -> int:
+        return self.logit["w"].shape[0]
+
+    @property
+    def n_cols(self) -> List[int]:
+        """Stacked-matrix column count per layer (telemetry reduction)."""
+        return [l.input_dim + l.hidden_dim for l in self.layers]
+
+    def weight_sparsity(self) -> float:
+        dense = sum(l.enc.h * l.enc.q for l in self.layers)
+        nnz = sum(float(jnp.sum(l.enc.valid)) for l in self.layers)
+        return 1.0 - nnz / dense
+
+
+class SpartusEngine(PackedSpartusModel):
+    """Multi-layer streaming engine with per-step sparsity telemetry."""
+
+    def __init__(self, am_params: Dict[str, Any], am_cfg: LSTMAMConfig,
+                 cfg: EngineConfig = EngineConfig()):
+        super().__init__(am_params, am_cfg, cfg)
         self.telemetry: List[Dict[str, int]] = []
 
     def new_session(self) -> List[LayerState]:
@@ -150,8 +177,3 @@ class SpartusEngine:
             "capacity_overflow_rate": float((dropped > 0).mean()),
             "mean_active_columns": float(nnz.mean()),
         }
-
-    def weight_sparsity(self) -> float:
-        dense = sum(l.enc.h * l.enc.q for l in self.layers)
-        nnz = sum(float(jnp.sum(l.enc.valid)) for l in self.layers)
-        return 1.0 - nnz / dense

@@ -1,0 +1,257 @@
+"""Continuous-batching session scheduler for streaming DeltaLSTM serving.
+
+The datacenter serving pattern (ESE's channel-multiplexed multi-voice
+engine, SHARP's adaptive RNN scheduler) translated to software: one
+weight-resident `BatchedSpartusEngine` and a `SessionPool` that
+multiplexes many independent streaming requests across its fixed-capacity
+slot dimension.
+
+Lifecycle of a request:
+
+  queued ──admit──> active(slot k) ──per-frame steps──> finished
+            ^                                              │
+            └── backpressure: waits while no slot is free ─┘
+
+* `admit` attaches a request to a free slot; the slot's device state is
+  re-initialised by the `reset` mask *inside* the next `step_batch`, so
+  admission never triggers an extra dispatch or a recompile.
+* `step` advances all active slots one frame in ONE jitted call, fetches
+  the `[B, n_classes]` logits once, appends each active slot's row to its
+  request, and retires slots whose utterance is exhausted.
+* Idle slots ride along masked-out for free; the pool never reshapes, so
+  the step function compiles exactly once per capacity.
+
+`serve_requests` is the batteries-included driver: feed it an iterable of
+requests with arrival times (in scheduler ticks), get per-request logits
+plus queue/service/latency metrics back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    """One streaming utterance: `feats [T, D]` arriving at `arrival_step`."""
+
+    req_id: int
+    arrival_step: int
+    feats: np.ndarray
+
+    @property
+    def n_frames(self) -> int:
+        return int(self.feats.shape[0])
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    arrival_step: int
+    admit_step: int       # tick the request got a slot
+    finish_step: int      # tick its last frame was produced
+    logits: np.ndarray    # [T, n_classes]
+    wall_latency_s: float  # wall time from eligibility to last frame
+
+    @property
+    def queue_steps(self) -> int:
+        return self.admit_step - self.arrival_step
+
+    @property
+    def service_steps(self) -> int:
+        return self.finish_step - self.admit_step + 1
+
+    @property
+    def turnaround_steps(self) -> int:
+        return self.finish_step - self.arrival_step + 1
+
+
+@dataclasses.dataclass
+class _Session:
+    request: StreamRequest
+    admit_step: int
+    arrival_wall: float
+    cursor: int = 0
+    needs_reset: bool = True
+    rows: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    capacity: int
+    n_requests: int
+    total_frames: int
+    total_steps: int
+    wall_s: float
+    frames_per_s: float
+    p50_latency_s: float
+    p95_latency_s: float
+    p50_turnaround_steps: float
+    p95_turnaround_steps: float
+    # aggregated device-side telemetry (telemetry.measured_sparsity output),
+    # the input to hwsim.spartus_model.evaluate_from_telemetry:
+    sparsity: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class SessionPool:
+    """Fixed-capacity pool of device-resident streaming sessions."""
+
+    def __init__(self, engine: BatchedSpartusEngine, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.engine = engine
+        self.capacity = capacity
+        self.state: PoolState = engine.init_state(capacity)
+        self._slots: List[Optional[_Session]] = [None] * capacity
+        # reused host-side staging buffer for the next frame of every slot:
+        self._x = np.zeros((capacity, engine.input_dim), np.float32)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def n_free(self) -> int:
+        return self.capacity - self.n_active
+
+    def admit(self, request: StreamRequest, now: int,
+              arrival_wall: Optional[float] = None) -> bool:
+        """Attach `request` to a free slot; False if the pool is full."""
+        if request.n_frames == 0:
+            raise ValueError(f"request {request.req_id} has no frames")
+        if request.feats.shape[-1] != self.engine.input_dim:
+            raise ValueError(
+                f"request {request.req_id}: feature dim "
+                f"{request.feats.shape[-1]} != engine input dim "
+                f"{self.engine.input_dim}")
+        for k in range(self.capacity):
+            if self._slots[k] is None:
+                self._slots[k] = _Session(
+                    request=request, admit_step=now,
+                    arrival_wall=(time.perf_counter() if arrival_wall is None
+                                  else arrival_wall))
+                return True
+        return False
+
+    def step(self, now: int) -> List[RequestResult]:
+        """Advance every active session one frame (one jitted call).
+        Returns the requests that finished on this tick."""
+        active = np.zeros((self.capacity,), bool)
+        reset = np.zeros((self.capacity,), bool)
+        self._x[:] = 0.0
+        for k, sess in enumerate(self._slots):
+            if sess is None:
+                continue
+            active[k] = True
+            reset[k] = sess.needs_reset
+            self._x[k] = sess.request.feats[sess.cursor]
+        if not active.any():
+            return []
+
+        self.state, logits = self.engine.step_batch(
+            self.state, self._x, active, reset)
+        logits_np = np.asarray(logits)          # ONE device->host fetch/tick
+
+        finished: List[RequestResult] = []
+        for k, sess in enumerate(self._slots):
+            if sess is None:
+                continue
+            sess.needs_reset = False
+            sess.rows.append(logits_np[k].copy())  # detach from the batch row
+            sess.cursor += 1
+            if sess.cursor >= sess.request.n_frames:
+                finished.append(RequestResult(
+                    req_id=sess.request.req_id,
+                    arrival_step=sess.request.arrival_step,
+                    admit_step=sess.admit_step,
+                    finish_step=now,
+                    logits=np.stack(sess.rows),
+                    wall_latency_s=time.perf_counter() - sess.arrival_wall,
+                ))
+                self._slots[k] = None
+        return finished
+
+    def measured_sparsity(self) -> Dict[str, float]:
+        return self.engine.measured_sparsity(self.state)
+
+
+RequestLike = Union[StreamRequest, Tuple[int, np.ndarray]]
+
+
+def _normalize(requests: Iterable[RequestLike]) -> List[StreamRequest]:
+    out: List[StreamRequest] = []
+    for i, r in enumerate(requests):
+        if isinstance(r, StreamRequest):
+            out.append(r)
+        else:
+            arrival, feats = r
+            out.append(StreamRequest(req_id=i, arrival_step=int(arrival),
+                                     feats=np.asarray(feats, np.float32)))
+    return sorted(out, key=lambda r: (r.arrival_step, r.req_id))
+
+
+def serve_requests(
+    engine: BatchedSpartusEngine,
+    requests: Iterable[RequestLike],
+    capacity: int,
+    max_steps: Optional[int] = None,
+) -> Tuple[List[RequestResult], ServeStats]:
+    """Drive a request stream through a `SessionPool` to completion.
+
+    requests: iterable of StreamRequest or `(arrival_step, feats [T, D])`.
+    Admission is FIFO in arrival order; a request that finds the pool full
+    waits (backpressure) and is admitted as soon as a slot frees.  Returns
+    per-request results (logits + latency) and aggregate throughput stats.
+    """
+    pool = SessionPool(engine, capacity)
+    pending = deque(_normalize(requests))
+    n_requests = len(pending)
+    waiting: deque[Tuple[StreamRequest, float]] = deque()
+    results: List[RequestResult] = []
+    now = 0
+    total_steps = 0
+    t0 = time.perf_counter()
+
+    while pending or waiting or pool.n_active:
+        # fast-forward over idle time to the next arrival:
+        if not waiting and not pool.n_active and pending:
+            now = max(now, pending[0].arrival_step)
+        while pending and pending[0].arrival_step <= now:
+            waiting.append((pending.popleft(), time.perf_counter()))
+        while waiting and pool.n_free:
+            req, arr_wall = waiting.popleft()
+            pool.admit(req, now, arrival_wall=arr_wall)
+        results.extend(pool.step(now))
+        total_steps += 1
+        now += 1
+        if max_steps is not None and total_steps >= max_steps:
+            break
+
+    wall = time.perf_counter() - t0
+    results.sort(key=lambda r: r.req_id)
+    lat = np.array([r.wall_latency_s for r in results], np.float64)
+    tas = np.array([r.turnaround_steps for r in results], np.float64)
+    frames = int(sum(r.logits.shape[0] for r in results))
+    stats = ServeStats(
+        capacity=capacity,
+        n_requests=n_requests,
+        total_frames=frames,
+        total_steps=total_steps,
+        wall_s=wall,
+        frames_per_s=frames / wall if wall > 0 else float("inf"),
+        p50_latency_s=float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        p95_latency_s=float(np.percentile(lat, 95)) if len(lat) else 0.0,
+        p50_turnaround_steps=float(np.percentile(tas, 50)) if len(tas) else 0.0,
+        p95_turnaround_steps=float(np.percentile(tas, 95)) if len(tas) else 0.0,
+        sparsity=pool.measured_sparsity(),
+    )
+    return results, stats

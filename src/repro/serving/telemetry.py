@@ -1,0 +1,79 @@
+"""Device-resident sparsity telemetry for the serving pool.
+
+The batch-1 `SpartusEngine` appends a Python dict per (step, layer) with
+`int()` host syncs on every frame — fine for one utterance, fatal for a
+server.  Here telemetry is three `[L]` integer accumulators that live on
+device and are folded into `BatchedSpartusEngine.step_batch` itself, so
+the steady state does zero host round-trips.  `measured_sparsity` fetches
+the accumulators once, on demand, and reduces them to the same summary
+statistics the batch-1 engine reports:
+
+  temporal_sparsity      = 1 - mean over (active step, layer) of nnz/n_cols
+  capacity_overflow_rate = fraction of samples where the NZI list dropped
+  mean_active_columns    = mean nnz per sample
+
+Because the per-layer column count is static, the mean-of-ratios reduces
+exactly to sums:  mean(nnz/cols) = (sum_l nnz_sum_l / n_cols_l) / sum_l steps_l,
+so the aggregate numbers equal what the per-step dict path would report.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TelemetryState(NamedTuple):
+    """Per-layer accumulators over (active slot, frame) samples.
+
+    float32, not int32: a long-running server would wrap an int32 counter
+    (garbage statistics), whereas float32 sums stay exact up to 2^24 and
+    then round — the reported *ratios* keep ~1e-7 relative accuracy for
+    the life of the process (int64/float64 need jax x64, off by default).
+    """
+
+    nnz_sum: jax.Array         # [L] float32: total fired deltas
+    overflow_steps: jax.Array  # [L] float32: samples where capacity dropped
+    steps: jax.Array           # [L] float32: number of samples
+
+
+def init_telemetry(n_layers: int) -> TelemetryState:
+    z = jnp.zeros((n_layers,), jnp.float32)
+    return TelemetryState(nnz_sum=z, overflow_steps=z, steps=z)
+
+
+def accumulate(
+    tel: TelemetryState,
+    layer: int,
+    nnz: jax.Array,      # [B] int32 fired-delta counts
+    dropped: jax.Array,  # [B] int32 overflow drop counts
+    active: jax.Array,   # [B] bool slot mask
+) -> TelemetryState:
+    """Fold one layer-step of one batch into the accumulators (traced)."""
+    act = active.astype(jnp.int32)
+    f32 = jnp.float32
+    return TelemetryState(
+        nnz_sum=tel.nnz_sum.at[layer].add(jnp.sum(nnz * act).astype(f32)),
+        overflow_steps=tel.overflow_steps.at[layer].add(
+            jnp.sum((dropped > 0).astype(jnp.int32) * act).astype(f32)),
+        steps=tel.steps.at[layer].add(jnp.sum(act).astype(f32)),
+    )
+
+
+def measured_sparsity(
+    tel: TelemetryState, n_cols: Sequence[int]
+) -> Dict[str, float]:
+    """Reduce the accumulators to the engine's summary dict.  This is the
+    only host fetch in the telemetry path."""
+    nnz, ovf, steps = (np.asarray(jax.device_get(a), np.float64) for a in tel)
+    total = steps.sum()
+    if total == 0:
+        return {}
+    cols = np.asarray(n_cols, np.float64)
+    return {
+        "temporal_sparsity": float(1.0 - (nnz / cols).sum() / total),
+        "capacity_overflow_rate": float(ovf.sum() / total),
+        "mean_active_columns": float(nnz.sum() / total),
+    }

@@ -90,7 +90,7 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
         lambda s: NamedSharding(mesh, s), param_specs(opt, mesh, cfg)))
     batch = api.make_train_batch(cfg, jax.random.key(1), 8, 32)
     step = make_train_step(cfg, AdamWConfig(lr=1e-3), 32)
-    with jax.set_mesh(mesh):
+    with mesh:
         jstep = jax.jit(step)
         losses = []
         for i in range(4):
@@ -98,10 +98,9 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
             losses.append(float(m["loss"]))
     # elastic: re-shard onto a smaller mesh and keep stepping
     host_params = jax.device_get(params)
-    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = jax.make_mesh((2, 2), ("data", "model"))
     params2 = reshard(host_params, mesh2, cfg)
-    with jax.set_mesh(mesh2):
+    with mesh2:
         opt2 = reshard(jax.device_get(opt), mesh2, cfg)
         params2, opt2, m2 = jax.jit(step)(params2, opt2, batch)
     print(json.dumps({"losses": losses, "elastic_loss": float(m2["loss"]),
