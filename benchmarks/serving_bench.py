@@ -9,6 +9,11 @@ identical (atol 1e-5) to the batch-1 engine's.
     PYTHONPATH=src python benchmarks/serving_bench.py
     PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate:
         fail unless capacity-16 aggregate frames/s >= 4x sequential
+    PYTHONPATH=src python benchmarks/serving_bench.py --sweep   # slow CI gate:
+        hidden in {128, 512} at m=16 / capacity 16 plus a forced-scatter
+        leg, emits BENCH_serving.json, fails if the pool ever drops below
+        the batch-1 engine (the crossover that regressed before the
+        scatter/dense-gather SpMV paths)
 
 Runs on CPU: the batch-1 engine pays ~8 XLA dispatches + 3 host syncs per
 (frame, layer) while the pool amortises one dispatch + one logits fetch
@@ -54,6 +59,64 @@ def make_requests(n: int, frames: int, input_dim: int,
     ]
 
 
+def bench_config(hidden: int, layers: int, input_dim: int, classes: int,
+                 frames: int, n_requests: int, caps: List[int], theta: float,
+                 gamma: float, m: int, capacity_frac: float,
+                 spmv_path: str = "auto"):
+    """One model configuration: sequential batch-1 baseline + the pool at
+    each capacity, with per-request logits parity checked against the
+    batch-1 engine.  Returns (report dict, parity_ok)."""
+    params, cfg = build_model(hidden, layers, input_dim, classes, gamma, m)
+    ecfg = EngineConfig(theta=theta, gamma=gamma, m=m,
+                        capacity_frac=capacity_frac, spmv_path=spmv_path)
+    e1 = SpartusEngine(params, cfg, ecfg)
+    eb = BatchedSpartusEngine(params, cfg, ecfg)
+    reqs = make_requests(n_requests, frames, input_dim)
+    total_frames = n_requests * frames
+
+    # -- sequential batch-1 baseline ----------------------------------------
+    warm = jnp.asarray(reqs[0].feats[:2])
+    e1.run_utterance(warm)  # compile
+    e1.telemetry.clear()
+    t0 = time.perf_counter()
+    seq_logits = [np.asarray(e1.run_utterance(jnp.asarray(r.feats)))
+                  for r in reqs]
+    t_seq = time.perf_counter() - t0
+    seq_fps = total_frames / t_seq
+    report = {"hidden": hidden, "m": m, "spmv_path": spmv_path,
+              "sequential": {"frames_per_s": seq_fps, "wall_s": t_seq}}
+    print(f"[bench] hidden={hidden} ({spmv_path}) sequential batch-1: "
+          f"{n_requests} x {frames} frames in {t_seq:.2f}s -> "
+          f"{seq_fps:.0f} frames/s")
+
+    # -- pooled, per capacity ------------------------------------------------
+    parity_ok = True
+    for cap in caps:
+        # warm-up compiles the step for this capacity outside the timing;
+        # full-length feats so the warm-up hits the same frame-buffer bucket
+        # as the timed run (a [:2] slice would bucket differently past 64
+        # frames and hide a recompile inside the timing):
+        serve_requests(eb, [StreamRequest(0, 0, reqs[0].feats)], cap)
+        results, stats = serve_requests(eb, reqs, capacity=cap)
+        for r in results:
+            if not np.allclose(r.logits, seq_logits[r.req_id], atol=1e-5):
+                parity_ok = False
+                print(f"[bench] PARITY FAIL req {r.req_id} at capacity {cap}")
+        speedup = stats.frames_per_s / seq_fps
+        report[f"capacity_{cap}"] = dict(stats.to_dict(), speedup=speedup)
+        print(f"[bench] capacity {cap:3d}: {stats.frames_per_s:8.0f} frames/s "
+              f"({speedup:4.1f}x)  p50 {stats.p50_latency_s*1e3:7.1f} ms  "
+              f"p95 {stats.p95_latency_s*1e3:7.1f} ms")
+    return report, parity_ok
+
+
+# sweep legs: (hidden, spmv_path).  The auto legs pin the dense-mirror route
+# (every gated config has S*(1-gamma) >= 1); the forced-scatter leg pins the
+# scatter kernels, which auto would otherwise never exercise here.
+SWEEP_LEGS = ((128, "auto"), (512, "auto"), (128, "scatter"))
+SWEEP_CAP = 16
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--hidden", type=int, default=64)
@@ -70,50 +133,60 @@ def main() -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless capacity-16 (or max capacity) hits "
                          ">=4x sequential frames/s with matching logits")
+    ap.add_argument("--sweep", action="store_true",
+                    help="crossover gate: hidden in {128, 512} at m=16, "
+                         "capacity 16; exit 1 if the pool is ever slower "
+                         "than batch-1 or parity fails")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--emit-json", metavar="PATH", default=None,
+                    help="write the report as JSON (--sweep defaults to "
+                         "BENCH_serving.json)")
     args = ap.parse_args()
 
-    params, cfg = build_model(args.hidden, args.layers, args.input_dim,
-                              args.classes, args.gamma, args.m)
-    ecfg = EngineConfig(theta=args.theta, gamma=args.gamma, m=args.m,
-                        capacity_frac=args.capacity_frac)
-    e1 = SpartusEngine(params, cfg, ecfg)
-    eb = BatchedSpartusEngine(params, cfg, ecfg)
-    reqs = make_requests(args.requests, args.frames, args.input_dim)
-    total_frames = args.requests * args.frames
+    if args.sweep:
+        if args.check:
+            ap.error("--sweep and --check are mutually exclusive gates")
+        if args.m != ap.get_default("m") or \
+                args.capacities != ap.get_default("capacities"):
+            ap.error("--sweep fixes m=16 and capacity 16; "
+                     "drop --m/--capacities or run without --sweep")
+        emit = args.emit_json or "BENCH_serving.json"
+        report = {}
+        ok = True
+        for hidden, path in SWEEP_LEGS:
+            rep, parity = bench_config(
+                hidden, args.layers, args.input_dim, args.classes,
+                args.frames, args.requests, [SWEEP_CAP], args.theta,
+                args.gamma, m=16, capacity_frac=args.capacity_frac,
+                spmv_path=path)
+            speedup = rep[f"capacity_{SWEEP_CAP}"]["speedup"]
+            crossed = speedup >= 1.0
+            print(f"[bench] sweep hidden={hidden} path={path}: parity="
+                  f"{'ok' if parity else 'FAIL'} speedup={speedup:.1f}x -> "
+                  f"{'PASS' if (parity and crossed) else 'FAIL'}")
+            ok = ok and parity and crossed
+            report[f"hidden_{hidden}_{path}"] = dict(
+                rep, parity=parity,
+                frames_per_s=rep[f"capacity_{SWEEP_CAP}"]["frames_per_s"])
+        if args.json:
+            print(json.dumps(report, indent=2))
+        with open(emit, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[bench] wrote {emit}")
+        return 0 if ok else 1
 
-    # -- sequential batch-1 baseline ----------------------------------------
-    warm = jnp.asarray(reqs[0].feats[:2])
-    e1.run_utterance(warm)  # compile
-    e1.telemetry.clear()
-    t0 = time.perf_counter()
-    seq_logits = [np.asarray(e1.run_utterance(jnp.asarray(r.feats)))
-                  for r in reqs]
-    t_seq = time.perf_counter() - t0
-    seq_fps = total_frames / t_seq
-    report = {"sequential": {"frames_per_s": seq_fps, "wall_s": t_seq}}
-    print(f"[bench] sequential batch-1: {args.requests} x {args.frames} "
-          f"frames in {t_seq:.2f}s -> {seq_fps:.0f} frames/s")
-
-    # -- pooled, per capacity ------------------------------------------------
     caps = [int(c) for c in args.capacities.split(",")]
-    parity_ok = True
-    for cap in caps:
-        # warm-up compiles the step for this capacity outside the timing:
-        serve_requests(eb, [StreamRequest(0, 0, reqs[0].feats[:2])], cap)
-        results, stats = serve_requests(eb, reqs, capacity=cap)
-        for r in results:
-            if not np.allclose(r.logits, seq_logits[r.req_id], atol=1e-5):
-                parity_ok = False
-                print(f"[bench] PARITY FAIL req {r.req_id} at capacity {cap}")
-        speedup = stats.frames_per_s / seq_fps
-        report[f"capacity_{cap}"] = dict(stats.to_dict(), speedup=speedup)
-        print(f"[bench] capacity {cap:3d}: {stats.frames_per_s:8.0f} frames/s "
-              f"({speedup:4.1f}x)  p50 {stats.p50_latency_s*1e3:7.1f} ms  "
-              f"p95 {stats.p95_latency_s*1e3:7.1f} ms")
+    report, parity_ok = bench_config(
+        args.hidden, args.layers, args.input_dim, args.classes, args.frames,
+        args.requests, caps, args.theta, args.gamma, args.m,
+        args.capacity_frac)
 
     if args.json:
         print(json.dumps(report, indent=2))
+    if args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[bench] wrote {args.emit_json}")
 
     if args.check:
         cap = max(caps)

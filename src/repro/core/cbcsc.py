@@ -66,11 +66,20 @@ def blen_for(h: int, m: int, gamma: float) -> int:
     return math.ceil((h // m) * (1.0 - gamma))
 
 
-def cbcsc_encode(w: jax.Array, m: int, blen: int | None = None) -> CBCSC:
+def cbcsc_encode(
+    w: jax.Array, m: int, blen: int | None = None, on_overflow: str = "raise"
+) -> CBCSC:
     """Encode a (column-balanced) sparse matrix.  If any subcolumn has more
-    than ``blen`` nonzeros a ValueError is raised (the matrix was not
-    CBTD-pruned to the promised gamma).  ``blen=None`` uses the max
-    subcolumn occupancy (always lossless)."""
+    than ``blen`` nonzeros, ``on_overflow`` decides: ``"raise"`` (default)
+    rejects the matrix (it was not CBTD-pruned to the promised gamma);
+    ``"clip"`` keeps the ``blen`` largest-magnitude nonzeros per subcolumn
+    and drops the rest — the pack-time enforcement of the format's BLEN
+    contract for untrained / partially-pruned matrices (the dropped count
+    is ``nnz(w) - sum(valid)``).  ``blen=None`` uses the max subcolumn
+    occupancy (always lossless)."""
+    if on_overflow not in ("raise", "clip"):
+        raise ValueError(f"on_overflow must be 'raise' or 'clip', got "
+                         f"{on_overflow!r}")
     h, q = w.shape
     if h % m:
         raise ValueError(f"H={h} not divisible by M={m}")
@@ -83,10 +92,21 @@ def cbcsc_encode(w: jax.Array, m: int, blen: int | None = None) -> CBCSC:
     if blen is None:
         blen = max(max_occ, 1)
     elif max_occ > blen:
-        raise ValueError(
-            f"subcolumn occupancy {max_occ} exceeds BLEN={blen}; "
-            "matrix is not column-balanced to the promised sparsity"
-        )
+        if on_overflow == "raise":
+            raise ValueError(
+                f"subcolumn occupancy {max_occ} exceeds BLEN={blen}; "
+                "matrix is not column-balanced to the promised sparsity"
+            )
+        # clip: per subcolumn keep the blen largest |w|, zero the rest
+        # (magnitude order only selects survivors; k order is restored by
+        # the stable sort below, so to_stream keeps Alg. 3 element order).
+        mag = jnp.where(nz, jnp.abs(sub), -jnp.inf)
+        top = jnp.argsort(-mag, axis=-1)[..., :blen]           # [Q, M, BLEN]
+        keep = jnp.any(
+            top[..., None] == jnp.arange(s, dtype=top.dtype), axis=-2
+        )                                                      # [Q, M, S]
+        nz = nz & keep
+        sub = sub * keep.astype(sub.dtype)
     # stable sort brings nonzero positions first, preserving k order:
     order = jnp.argsort(~nz, axis=-1, stable=True)[..., :blen]
     val = jnp.take_along_axis(sub, order, axis=-1)

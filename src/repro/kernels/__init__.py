@@ -10,4 +10,7 @@ fallback) in ops.py.  See tests/test_kernels.py for the shape/dtype sweeps.
 from repro.kernels import ops, ref
 from repro.kernels.delta_encode import delta_encode_pallas
 from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
-from repro.kernels.stsp_spmv import stsp_spmv_pallas
+from repro.kernels.stsp_spmv import (
+    stsp_spmv_pallas,
+    stsp_spmv_scatter_batch_pallas,
+)

@@ -18,7 +18,10 @@ import jax.numpy as jnp
 
 from repro.kernels.delta_encode import delta_encode_pallas
 from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
-from repro.kernels.stsp_spmv import stsp_spmv_pallas
+from repro.kernels.stsp_spmv import (
+    stsp_spmv_pallas,
+    stsp_spmv_scatter_batch_pallas,
+)
 from repro.kernels import ref as _ref
 
 PAD_ALIGN = 1024  # delta_encode tile: 8 sublanes x 128 lanes
@@ -86,8 +89,14 @@ def select_active_columns(
 def stsp_spmv_xla(
     val: jax.Array, lidx: jax.Array, idx: jax.Array, ds_vals: jax.Array, s: int
 ) -> jax.Array:
-    """XLA gather+einsum path (identical math to the Pallas kernel)."""
-    return _ref.stsp_spmv_ref(val, lidx, idx, ds_vals, s)
+    """XLA gather+scatter-add path (identical math to the Pallas kernel).
+
+    Historically this decompressed CBCSC with an S-wide one-hot einsum —
+    O(S) work per stored nonzero, which cratered the batched pool at large
+    subcolumn lengths (hidden>=256 / m=16).  The scatter-add formulation
+    (``ref.stsp_spmv_scatter_ref``) touches each fetched (value, lidx) pair
+    exactly once."""
+    return _ref.stsp_spmv_scatter_ref(val, lidx, idx, ds_vals, s)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "use_pallas", "interpret"))
@@ -140,6 +149,17 @@ def select_active_columns_batch(
     return jax.vmap(fn)(delta)
 
 
+def spmv_use_dense_gather(s: int, gamma: float) -> bool:
+    """Path heuristic for the batched SpMV: the CBCSC scatter path does
+    BLEN ~= S*(1-gamma) adds per (PE, active column), the dense-gather path
+    does S multiply-adds but on the MXU with no index traffic.  Once
+    ``S*(1-gamma) >= 1`` the scatter path has no arithmetic advantage left
+    per lane, so large-S models route to the dense mirror and never touch
+    the O(S)-per-nonzero decompression that caused the hidden>=256 / m=16
+    performance cliff."""
+    return s * (1.0 - gamma) >= 1.0
+
+
 @functools.partial(jax.jit, static_argnames=("s", "use_pallas", "interpret"))
 def stsp_spmv_batch(
     val: jax.Array,
@@ -150,10 +170,26 @@ def stsp_spmv_batch(
     s: int,
     use_pallas: bool = False,
     interpret: bool = True,
+    w_dense: jax.Array | None = None,
 ) -> jax.Array:
     """Batched STSP SpMxSpV: shared CBCSC weights, per-slot active lists.
-    idx, ds_vals: [B, K] -> y [B, H]."""
-    fn = functools.partial(stsp_spmv, s=s, use_pallas=use_pallas,
+    idx, ds_vals: [B, K] -> y [B, H].
+
+    Three implementations, selected at pack time (serving/engine.py applies
+    ``spmv_use_dense_gather``):
+      * ``w_dense`` given — dense-gather fallback: one [B, K] panel gather
+        from the pack-time dense mirror + an MXU matmul (no CBCSC decode in
+        the hot loop at all);
+      * ``use_pallas`` — single batched Pallas scatter kernel over grid
+        (B, K) (one pallas_call for the whole pool, not a vmap of B calls);
+      * otherwise — vmap of the XLA scatter-add path.
+    """
+    if w_dense is not None:
+        return delta_spmv_dense_gather_batch(w_dense, idx, ds_vals)
+    if use_pallas:
+        return stsp_spmv_scatter_batch_pallas(val, lidx, idx, ds_vals, s=s,
+                                              interpret=interpret)
+    fn = functools.partial(stsp_spmv, s=s, use_pallas=False,
                            interpret=interpret)
     return jax.vmap(fn, in_axes=(None, None, 0, 0))(val, lidx, idx, ds_vals)
 
@@ -173,6 +209,29 @@ def delta_spmv_dense_gather(
 ) -> jax.Array:
     """Temporal-sparsity-only path: gather dense columns of w [H, Q] by the
     active index list and run one [H, K] x [K] MXU matmul.  Used when the
-    weights are not CBCSC-packed (e.g. unpruned baselines)."""
+    weights are not CBCSC-packed (e.g. unpruned baselines) and as the
+    batch-1 leg of the large-S dense mirror path (spmv_use_dense_gather)."""
     panel = jnp.take(w, idx, axis=1)             # [H, K]
     return panel @ ds_vals
+
+
+def delta_spmv_dense_gather_batch(
+    w: jax.Array, idx: jax.Array, ds_vals: jax.Array
+) -> jax.Array:
+    """Batched dense-mirror SpMV: w [H, Q], idx/ds_vals [B, K] -> y [B, H].
+
+    The [B, K] active lists are scattered back to a dense [B, Q] delta
+    slab (one cheap gather-free scatter-add; duplicate indices accumulate,
+    padding slots carry 0.0) and contracted against the mirror in a single
+    [B, Q] x [Q, H] MXU matmul.  Unlike a per-slot [B, K, H] column-panel
+    gather — whose weight traffic grows with B — the GEMM reads the mirror
+    ONCE per tick regardless of pool size, which is exactly the
+    weight-fetch amortisation continuous batching exists for.  Exploits
+    temporal sparsity only; spatial sparsity is already priced into the
+    pack-time mirror's zeros."""
+    b, k = idx.shape
+    slot = jnp.arange(b, dtype=idx.dtype)[:, None]
+    ds_dense = jnp.zeros((b, w.shape[1]), jnp.float32).at[
+        jnp.broadcast_to(slot, (b, k)), idx
+    ].add(ds_vals.astype(jnp.float32))
+    return ds_dense @ w.T.astype(jnp.float32)

@@ -53,3 +53,24 @@ def stsp_spmv_ref(
         onehot.astype(jnp.float32),
     )                                              # [K, S, M]
     return jnp.sum(contrib, axis=0).reshape(s * m)  # row r = s*M + m
+
+
+def stsp_spmv_scatter_ref(
+    val: jax.Array,      # [Q, M, BLEN] CBCSC values (0-padded)
+    lidx: jax.Array,     # [Q, M, BLEN] local indices
+    idx: jax.Array,      # [K] active column ids (padded entries arbitrary)
+    ds_vals: jax.Array,  # [K] delta values (0.0 for padding)
+    s: int,              # subcolumn length H/M
+) -> jax.Array:
+    """Scatter-add formulation of ``stsp_spmv_ref`` — the oracle of the
+    batched Pallas scatter kernel and the XLA serving path.  Each fetched
+    (value, lidx) pair lands at global row r = lidx*M + pe via one
+    scatter-add, O(1) per nonzero instead of the one-hot's O(S).  Must be
+    numerically identical (same fp32 adds, different order) to the one-hot
+    spec above."""
+    q, m, blen = val.shape
+    v = val[idx].astype(jnp.float32) * ds_vals[:, None, None].astype(jnp.float32)
+    pe = jnp.arange(m, dtype=jnp.int32)[None, :, None]        # [1, M, 1]
+    rows = lidx[idx] * m + pe                                  # [K, M, BLEN]
+    return jnp.zeros((s * m,), jnp.float32).at[rows.reshape(-1)].add(
+        v.reshape(-1))

@@ -28,7 +28,10 @@ pairs per active column — the same argument as the paper's Sec. III-C,
 with the memory-interface arbitration replaced by a fixed-shape DMA.
 
 The XLA fallback (ops.stsp_spmv_xla) implements the identical math with
-gather + einsum for non-TPU backends and for batched serving.
+gather + scatter-add for non-TPU backends; batched serving uses either
+``stsp_spmv_scatter_batch_pallas`` below (one pallas_call over grid (B, K),
+scatter-add into each slot's [S, M] accumulator) or the pack-time dense
+mirror (ops.delta_spmv_dense_gather_batch) when S*(1-gamma) >= 1.
 """
 from __future__ import annotations
 
@@ -38,6 +41,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names it TPUCompilerParams; 0.5+ renamed to CompilerParams.
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams")
 
 
 def _stsp_kernel(idx_ref, ds_ref, val_ref, lidx_ref, y_ref, *, s: int, k_total: int):
@@ -60,6 +67,83 @@ def _stsp_kernel(idx_ref, ds_ref, val_ref, lidx_ref, y_ref, *, s: int, k_total: 
         preferred_element_type=jnp.float32,
     )
     y_ref[...] += ds.astype(jnp.float32) * contrib
+
+
+def _stsp_scatter_batch_kernel(idx_ref, ds_ref, val_ref, lidx_ref, y_ref, *, s: int):
+    """Batched scatter variant: one (slot, active-column) pair per grid step.
+
+    Instead of expanding each PE's BLEN (value, lidx) pairs into an S-wide
+    one-hot and contracting (O(S) work per nonzero), the accumulator tile is
+    indexed *directly* with ``lidx`` — a scatter-add into the [S, M] VMEM
+    block, O(1) per nonzero.  This is the literal per-PE LUTRAM write of the
+    FPGA MAC array (Sec. IV-A) rather than its one-hot algebraic encoding.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    val = val_ref[0]                       # [M, BLEN] this column's slab
+    lidx = lidx_ref[0]                     # [M, BLEN]
+    ds = ds_ref[0, 0]                      # scalar delta value
+    m, blen = val.shape
+    pe = jax.lax.broadcasted_iota(jnp.int32, (m, blen), 0)
+    contrib = (
+        jnp.zeros((s, m), jnp.float32)
+        .at[lidx, pe]
+        .add(ds.astype(jnp.float32) * val.astype(jnp.float32))
+    )
+    y_ref[0] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def stsp_spmv_scatter_batch_pallas(
+    val: jax.Array,      # [Q, M, BLEN]
+    lidx: jax.Array,     # [Q, M, BLEN] int32
+    idx: jax.Array,      # [B, K] int32 active columns per slot (pad: any id)
+    ds_vals: jax.Array,  # [B, K] float (pad: 0.0)
+    *,
+    s: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched STSP SpMxSpV: y [B, H] = sum_k ds[b, k] * W[:, idx[b, k]].
+
+    One pallas_call for the whole pool: grid (B, K), slots parallel, the K
+    active columns of each slot revisiting that slot's [S, M] accumulator
+    ("arbitrary" semantics).  The scalar-prefetched [B, K] NZI table steers
+    the DMA so only active columns' CBCSC slabs are fetched from HBM —
+    the weight-fetch economy of the paper's NZI dataflow, kept intact under
+    batching (no one-hot materialisation, no [K, M, BLEN, S] temporaries).
+    """
+    q, m, blen = val.shape
+    b, k_total = idx.shape
+
+    kernel = functools.partial(_stsp_scatter_batch_kernel, s=s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k_total),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, kk, idx_ref: (bb, kk)),   # ds_vals
+            pl.BlockSpec((1, m, blen),
+                         lambda bb, kk, idx_ref: (idx_ref[bb, kk], 0, 0)),
+            pl.BlockSpec((1, m, blen),
+                         lambda bb, kk, idx_ref: (idx_ref[bb, kk], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, m), lambda bb, kk, idx_ref: (bb, 0, 0)),
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, m), jnp.float32),
+        interpret=interpret,
+        compiler_params=(
+            _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+            if not interpret
+            else None
+        ),
+    )(idx, ds_vals, val, lidx)
+    return y.reshape(b, s * m)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
@@ -93,7 +177,7 @@ def stsp_spmv_pallas(
         out_shape=jax.ShapeDtypeStruct((s, m), jnp.float32),
         interpret=interpret,
         compiler_params=(
-            pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+            _CompilerParams(dimension_semantics=("arbitrary",))
             if not interpret
             else None
         ),

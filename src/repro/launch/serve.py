@@ -91,7 +91,8 @@ def serve_spartus(args):
               f"p95 {stats.p95_latency_s*1e3:.0f} ms")
         sp = stats.sparsity
         print(f"[serve] temporal sparsity {sp['temporal_sparsity']:.1%}, "
-              f"weight sparsity {engine.weight_sparsity():.1%}, "
+              f"weight sparsity {engine.weight_sparsity():.1%} "
+              f"(pack overflow {engine.pack_overflow_count()} clipped), "
               f"overflow {sp['capacity_overflow_rate']:.1%}")
         rep = hw.evaluate_from_telemetry(hw.SPARTUS, hw.TEST_LAYER,
                                          args.gamma, sp)
@@ -108,7 +109,8 @@ def serve_spartus(args):
     sp = engine.measured_sparsity()
     print(f"[serve] streamed {feats.shape[1]} frames in {dt:.2f}s; "
           f"temporal sparsity {sp['temporal_sparsity']:.1%}, "
-          f"weight sparsity {engine.weight_sparsity():.1%}, "
+          f"weight sparsity {engine.weight_sparsity():.1%} "
+          f"(pack overflow {engine.pack_overflow_count()} clipped), "
           f"overflow {sp['capacity_overflow_rate']:.1%}")
     rep = hw.evaluate_from_telemetry(hw.SPARTUS, hw.TEST_LAYER, args.gamma, sp)
     print(f"[serve] modelled Spartus latency for the paper's test layer at "

@@ -18,6 +18,13 @@ a `reset` mask re-initialises slots at admission time so attach/detach
 never recompiles.  Telemetry is accumulated on device (telemetry.py) and
 fetched only when `measured_sparsity` is called.
 
+Two step entry points share the same core: `step_batch` takes this
+tick's host-staged frames `x [B, D]` (reference semantics, tests), while
+`step_frames` reads from pre-uploaded per-slot feature buffers
+`[B, T_buf, D]` indexed by the device cursor in `PoolState` — the
+steady-state serving tick (`SessionPool.step`) therefore performs no
+host->device frame copy at all.
+
 Per-slot numerics are identical to `SpartusEngine`: the batched kernels
 are vmaps of the very same ops, so a session's logits do not depend on
 what the other slots are doing (verified in tests/test_serving_pool.py).
@@ -49,6 +56,9 @@ class PoolState(NamedTuple):
 
     layers: Tuple[BatchedLayerState, ...]
     telemetry: tele.TelemetryState
+    cursor: jax.Array  # [B] int32 per-slot frame cursor into the pool's
+    #                    device-resident feature buffers (step_frames);
+    #                    carried through unchanged by the legacy step_batch
 
 
 def _fresh_layer_state(layer: PackedLayer, n_slots: int) -> BatchedLayerState:
@@ -71,6 +81,7 @@ class BatchedSpartusEngine(PackedSpartusModel):
                  cfg: EngineConfig = EngineConfig()):
         super().__init__(am_params, am_cfg, cfg)
         self._step = jax.jit(self._step_impl)
+        self._step_frames = jax.jit(self._step_frames_impl)
 
     # -- state management ----------------------------------------------------
 
@@ -78,13 +89,14 @@ class BatchedSpartusEngine(PackedSpartusModel):
         return PoolState(
             layers=tuple(_fresh_layer_state(l, n_slots) for l in self.layers),
             telemetry=tele.init_telemetry(len(self.layers)),
+            cursor=jnp.zeros((n_slots,), jnp.int32),
         )
 
     # -- the batched step ----------------------------------------------------
 
-    def _step_impl(
+    def _step_core(
         self, state: PoolState, x: jax.Array, active: jax.Array,
-        reset: jax.Array,
+        reset: jax.Array, cursor: jax.Array,
     ) -> Tuple[PoolState, jax.Array]:
         cfg = self.cfg
         n_slots = x.shape[0]
@@ -110,7 +122,7 @@ class BatchedSpartusEngine(PackedSpartusModel):
             )
             y = ops.stsp_spmv_batch(
                 layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
-                use_pallas=cfg.use_pallas,
+                use_pallas=cfg.use_pallas, w_dense=layer.w_dense,
             ).astype(st.dm.dtype)
             dm = st.dm + y
             h_new, c_new = ops.lstm_pointwise_batch(
@@ -128,13 +140,34 @@ class BatchedSpartusEngine(PackedSpartusModel):
             h = h_new
         h = jax.nn.relu(h @ self.fcl["w"].T + self.fcl["b"])
         logits = h @ self.logit["w"].T + self.logit["b"]
-        return PoolState(tuple(new_layers), tel), logits
+        return PoolState(tuple(new_layers), tel, cursor), logits
+
+    def _step_impl(
+        self, state: PoolState, x: jax.Array, active: jax.Array,
+        reset: jax.Array,
+    ) -> Tuple[PoolState, jax.Array]:
+        # legacy host-staged entry: the caller supplies this tick's frames,
+        # the device cursor rides along untouched.
+        return self._step_core(state, x, active, reset, state.cursor)
+
+    def _step_frames_impl(
+        self, state: PoolState, frames: jax.Array, active: jax.Array,
+        reset: jax.Array,
+    ) -> Tuple[PoolState, jax.Array]:
+        # device-resident entry: gather each slot's current frame from the
+        # pre-uploaded [B, T_buf, D] buffers by the cursor carried in
+        # PoolState — a tick moves zero frame bytes host -> device.
+        n_slots, t_buf, _ = frames.shape
+        cur = jnp.where(reset, 0, state.cursor)
+        x = frames[jnp.arange(n_slots), jnp.minimum(cur, t_buf - 1)]
+        new_cur = cur + active.astype(cur.dtype)
+        return self._step_core(state, x, active, reset, new_cur)
 
     def step_batch(
         self, state: PoolState, x: jax.Array, active: jax.Array,
         reset: jax.Array | None = None,
     ) -> Tuple[PoolState, jax.Array]:
-        """Advance every active slot one frame.
+        """Advance every active slot one frame from host-staged frames.
 
         x      [B, D]  next input frame per slot (zeros for idle slots)
         active [B]     slots that consume a frame this tick
@@ -147,6 +180,26 @@ class BatchedSpartusEngine(PackedSpartusModel):
             reset = jnp.zeros(active.shape, bool)
         return self._step(state, jnp.asarray(x, jnp.float32),
                           jnp.asarray(active, bool), jnp.asarray(reset, bool))
+
+    def step_frames(
+        self, state: PoolState, frames: jax.Array, active: jax.Array,
+        reset: jax.Array | None = None,
+    ) -> Tuple[PoolState, jax.Array]:
+        """Advance every active slot one frame from device-resident buffers.
+
+        frames [B, T_buf, D]  per-slot feature buffers already on device
+                              (SessionPool.admit uploads each utterance once)
+        active / reset        as in ``step_batch``
+
+        Each slot's frame is selected by ``state.cursor`` *on device* (reset
+        slots restart at 0; active slots advance by 1), so the steady-state
+        tick issues no host staging copy at all.  Numerics are identical to
+        feeding the same frames through ``step_batch``.
+        """
+        if reset is None:
+            reset = jnp.zeros(active.shape, bool)
+        return self._step_frames(state, frames, jnp.asarray(active, bool),
+                                 jnp.asarray(reset, bool))
 
     # -- telemetry -----------------------------------------------------------
 

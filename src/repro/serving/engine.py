@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CBCSC, blen_for, cbcsc_encode, int8_pack, keep_count,
+    CBCSC, blen_for, cbcsc_decode, cbcsc_encode, int8_pack, keep_count,
 )
 from repro.core.delta_lstm import stacked_weight_matrix
 from repro.kernels import ops
@@ -39,6 +39,8 @@ class PackedLayer:
     input_dim: int
     hidden_dim: int
     capacity: int              # NZI list capacity
+    pack_overflow: int = 0     # nonzeros clipped enforcing BLEN at pack time
+    w_dense: Optional[jax.Array] = None  # [4H, D+H] mirror (dense-gather path)
 
 
 @dataclasses.dataclass
@@ -49,10 +51,25 @@ class EngineConfig:
     capacity_frac: float = 0.5  # NZI capacity as fraction of columns
     use_pallas: bool = False
     quant_bits: int = 8
+    # SpMV implementation: "auto" routes layers with S*(1-gamma) >= 1 to the
+    # dense-gather mirror (ops.spmv_use_dense_gather); "scatter" forces the
+    # CBCSC scatter path, "dense" forces the mirror.
+    spmv_path: str = "auto"
 
 
 def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
-    """Export one (CBTD-pruned) LSTM layer to the serving format."""
+    """Export one (CBTD-pruned) LSTM layer to the serving format.
+
+    BLEN is *enforced* at ``blen_for(gamma)`` (Alg. 3), clipping the
+    smallest-magnitude overflow nonzeros per subcolumn, rather than derived
+    from max occupancy: an untrained or partially-pruned matrix used to
+    inflate BLEN to S, silently voiding the format's bandwidth contract
+    (and making ``weight_sparsity()`` report near 0).  The clipped count is
+    recorded as ``pack_overflow`` — 0 for any properly CBTD-pruned model.
+    """
+    if cfg.spmv_path not in ("auto", "scatter", "dense"):
+        raise ValueError(f"spmv_path must be 'auto', 'scatter' or 'dense', "
+                         f"got {cfg.spmv_path!r}")
     w = stacked_weight_matrix(params)              # [4H, D+H]
     q8, scale = int8_pack(w)
     wq = q8.astype(jnp.float32) * scale            # dequantized int8 grid
@@ -61,12 +78,24 @@ def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
     m = cfg.m
     while h4 % m:
         m //= 2
-    enc = cbcsc_encode(wq, m)
+    blen = blen_for(h4, m, cfg.gamma)
+    enc = cbcsc_encode(wq, m, blen=blen, on_overflow="clip")
+    overflow = int(jax.device_get(jnp.sum(wq != 0) - jnp.sum(enc.valid)))
+    s = enc.s
+    if cfg.spmv_path == "dense" or (
+        cfg.spmv_path == "auto" and ops.spmv_use_dense_gather(s, cfg.gamma)
+    ):
+        # pack-time dense mirror: decoded from the (clipped) CBCSC arrays so
+        # every SpMV path computes from identical weights.
+        w_dense = cbcsc_decode(enc, jnp.float32)
+    else:
+        w_dense = None
     capacity = max(int(n_cols * cfg.capacity_frac), 8)
     return PackedLayer(
         enc=enc, scale=scale, bias=params["b"],
         input_dim=w.shape[1] - params["w_h"].shape[1],
         hidden_dim=params["w_h"].shape[1], capacity=capacity,
+        pack_overflow=overflow, w_dense=w_dense,
     )
 
 
@@ -90,10 +119,17 @@ def _step_layer(
         s, state.s_hat, cfg.theta, use_pallas=cfg.use_pallas
     )
     idx, vals, dropped = ops.select_active_columns(delta, layer.capacity)
-    dm = state.dm + ops.stsp_spmv(
-        layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
-        use_pallas=cfg.use_pallas,
-    ).astype(state.dm.dtype)
+    if layer.w_dense is not None:
+        # B=1 leg of the exact batched dense-mirror computation, so pooled
+        # and batch-1 logits stay bit-comparable on the dense path:
+        y = ops.delta_spmv_dense_gather_batch(
+            layer.w_dense, idx[None], vals[None])[0]
+    else:
+        y = ops.stsp_spmv(
+            layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
+            use_pallas=cfg.use_pallas,
+        )
+    dm = state.dm + y.astype(state.dm.dtype)
     h_new, c_new = ops.lstm_pointwise(
         dm.reshape(4, layer.hidden_dim), state.c, use_pallas=cfg.use_pallas
     )
@@ -132,9 +168,19 @@ class PackedSpartusModel:
         return [l.input_dim + l.hidden_dim for l in self.layers]
 
     def weight_sparsity(self) -> float:
+        """Fraction of zero weights in the packed layers.  Because pack time
+        enforces BLEN = blen_for(gamma), this is >= 1 - BLEN/S even for an
+        unpruned matrix (overflow is clipped, see ``pack_overflow_count``)
+        instead of collapsing to ~0 when BLEN used to track max occupancy."""
         dense = sum(l.enc.h * l.enc.q for l in self.layers)
         nnz = sum(float(jnp.sum(l.enc.valid)) for l in self.layers)
         return 1.0 - nnz / dense
+
+    def pack_overflow_count(self) -> int:
+        """Total nonzeros clipped across layers enforcing BLEN at pack time
+        (0 for a properly CBTD-pruned model; > 0 flags that the exported
+        weights deviate from the training-time matrix)."""
+        return sum(l.pack_overflow for l in self.layers)
 
 
 class SpartusEngine(PackedSpartusModel):

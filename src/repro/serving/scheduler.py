@@ -12,14 +12,20 @@ Lifecycle of a request:
             ^                                              │
             └── backpressure: waits while no slot is free ─┘
 
-* `admit` attaches a request to a free slot; the slot's device state is
-  re-initialised by the `reset` mask *inside* the next `step_batch`, so
-  admission never triggers an extra dispatch or a recompile.
-* `step` advances all active slots one frame in ONE jitted call, fetches
-  the `[B, n_classes]` logits once, appends each active slot's row to its
-  request, and retires slots whose utterance is exhausted.
-* Idle slots ride along masked-out for free; the pool never reshapes, so
-  the step function compiles exactly once per capacity.
+* `admit` attaches a request to a free slot and uploads its *whole*
+  utterance `[T, D]` into the slot's device-resident feature buffer once;
+  the slot's device state is re-initialised by the `reset` mask *inside*
+  the next `step_frames`, so admission never triggers an extra dispatch
+  or a recompile.
+* `step` advances all active slots one frame in ONE jitted call
+  (`step_frames`): each slot's current frame is gathered **on device** by
+  the cursor carried in `PoolState` — the tick moves zero frame bytes
+  host -> device — then the `[B, n_classes]` logits are fetched once,
+  each active slot's row appended to its request, and slots whose
+  utterance is exhausted retire.
+* Idle slots ride along masked-out for free; the pool never reshapes (the
+  frame buffer length is bucketed to powers of two), so the step function
+  compiles once per (capacity, bucket).
 
 `serve_requests` is the batteries-included driver: feed it an iterable of
 requests with arrival times (in scheduler ticks), get per-request logits
@@ -32,6 +38,7 @@ import time
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
@@ -58,6 +65,8 @@ class RequestResult:
     finish_step: int      # tick its last frame was produced
     logits: np.ndarray    # [T, n_classes]
     wall_latency_s: float  # wall time from eligibility to last frame
+    truncated: bool = False  # stopped by max_steps with frames still pending
+    #                          (logits holds the frames produced so far)
 
     @property
     def queue_steps(self) -> int:
@@ -87,7 +96,7 @@ class ServeStats:
     capacity: int
     n_requests: int
     total_frames: int
-    total_steps: int
+    total_steps: int      # ticks that advanced >= 1 slot (idle ticks excluded)
     wall_s: float
     frames_per_s: float
     p50_latency_s: float
@@ -97,23 +106,47 @@ class ServeStats:
     # aggregated device-side telemetry (telemetry.measured_sparsity output),
     # the input to hwsim.spartus_model.evaluate_from_telemetry:
     sparsity: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # True when max_steps stopped the run before every request completed;
+    # in-flight sessions were drained into truncated RequestResults:
+    truncated: bool = False
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
 
-class SessionPool:
-    """Fixed-capacity pool of device-resident streaming sessions."""
+def _frame_bucket(n: int, floor: int = 64) -> int:
+    """Frame-buffer length bucket: next power of two, >= ``floor``.  Keeps
+    the device buffer shape (and thus the compiled step) stable across
+    utterance lengths; growth past the bucket recompiles once."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
 
-    def __init__(self, engine: BatchedSpartusEngine, capacity: int):
+
+class SessionPool:
+    """Fixed-capacity pool of device-resident streaming sessions.
+
+    Request features live on device: ``admit`` uploads the whole utterance
+    `[T, D]` into the slot's row of a `[B, T_buf, D]` buffer once, and every
+    tick gathers each slot's current frame by the device cursor in
+    ``PoolState`` — the steady state issues zero per-tick host staging
+    copies (the old `step_batch` path re-staged every slot's frame on host
+    each tick, which at large hidden sizes cost more than the math).
+    """
+
+    def __init__(self, engine: BatchedSpartusEngine, capacity: int,
+                 max_frames: int = 64):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.engine = engine
         self.capacity = capacity
         self.state: PoolState = engine.init_state(capacity)
         self._slots: List[Optional[_Session]] = [None] * capacity
-        # reused host-side staging buffer for the next frame of every slot:
-        self._x = np.zeros((capacity, engine.input_dim), np.float32)
+        # device-resident per-slot feature buffers, uploaded at admission:
+        self._t_buf = _frame_bucket(max_frames)
+        self._frames = jnp.zeros((capacity, self._t_buf, engine.input_dim),
+                                 jnp.float32)
 
     @property
     def n_active(self) -> int:
@@ -139,26 +172,38 @@ class SessionPool:
                     request=request, admit_step=now,
                     arrival_wall=(time.perf_counter() if arrival_wall is None
                                   else arrival_wall))
+                self._upload(k, request.feats)
                 return True
         return False
+
+    def _upload(self, slot: int, feats: np.ndarray) -> None:
+        """One-time H2D copy of a whole utterance into the slot's buffer
+        (grows the bucket — and recompiles the step — only when an
+        utterance exceeds every previous one)."""
+        t = feats.shape[0]
+        if t > self._t_buf:
+            new_t = _frame_bucket(t, floor=self._t_buf)
+            self._frames = jnp.pad(
+                self._frames, ((0, 0), (0, new_t - self._t_buf), (0, 0)))
+            self._t_buf = new_t
+        self._frames = self._frames.at[slot, :t].set(
+            jnp.asarray(feats, jnp.float32))
 
     def step(self, now: int) -> List[RequestResult]:
         """Advance every active session one frame (one jitted call).
         Returns the requests that finished on this tick."""
         active = np.zeros((self.capacity,), bool)
         reset = np.zeros((self.capacity,), bool)
-        self._x[:] = 0.0
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
             active[k] = True
             reset[k] = sess.needs_reset
-            self._x[k] = sess.request.feats[sess.cursor]
         if not active.any():
             return []
 
-        self.state, logits = self.engine.step_batch(
-            self.state, self._x, active, reset)
+        self.state, logits = self.engine.step_frames(
+            self.state, self._frames, active, reset)
         logits_np = np.asarray(logits)          # ONE device->host fetch/tick
 
         finished: List[RequestResult] = []
@@ -179,6 +224,29 @@ class SessionPool:
                 ))
                 self._slots[k] = None
         return finished
+
+    def drain(self, now: int) -> List[RequestResult]:
+        """Evict every in-flight session, returning truncated
+        ``RequestResult``s with the logits produced so far (used when
+        ``serve_requests`` hits ``max_steps`` mid-stream, so partial work is
+        surfaced instead of silently dropped)."""
+        n_classes = self.engine.n_classes
+        out: List[RequestResult] = []
+        for k, sess in enumerate(self._slots):
+            if sess is None:
+                continue
+            out.append(RequestResult(
+                req_id=sess.request.req_id,
+                arrival_step=sess.request.arrival_step,
+                admit_step=sess.admit_step,
+                finish_step=now,
+                logits=(np.stack(sess.rows) if sess.rows
+                        else np.zeros((0, n_classes), np.float32)),
+                wall_latency_s=time.perf_counter() - sess.arrival_wall,
+                truncated=True,
+            ))
+            self._slots[k] = None
+        return out
 
     def measured_sparsity(self) -> Dict[str, float]:
         return self.engine.measured_sparsity(self.state)
@@ -211,14 +279,25 @@ def serve_requests(
     Admission is FIFO in arrival order; a request that finds the pool full
     waits (backpressure) and is admitted as soon as a slot frees.  Returns
     per-request results (logits + latency) and aggregate throughput stats.
+
+    If ``max_steps`` stops the run early, in-flight sessions are drained
+    into ``RequestResult``s with ``truncated=True`` holding their partial
+    logits (never-admitted requests have no partial logits and are simply
+    absent from the results); ``stats.truncated`` flags the cut.
+    ``total_steps`` counts only ticks that advanced at least one slot, so
+    frames/step utilisation is not diluted by idle fast-forward ticks.
     """
-    pool = SessionPool(engine, capacity)
     pending = deque(_normalize(requests))
     n_requests = len(pending)
+    # pre-size the device frame buffers to the longest utterance so no
+    # mid-run bucket growth (= recompile) can happen:
+    max_frames = max((r.n_frames for r in pending), default=1)
+    pool = SessionPool(engine, capacity, max_frames=max_frames)
     waiting: deque[Tuple[StreamRequest, float]] = deque()
     results: List[RequestResult] = []
     now = 0
     total_steps = 0
+    truncated = False
     t0 = time.perf_counter()
 
     while pending or waiting or pool.n_active:
@@ -230,10 +309,18 @@ def serve_requests(
         while waiting and pool.n_free:
             req, arr_wall = waiting.popleft()
             pool.admit(req, now, arrival_wall=arr_wall)
+        # count only ticks that advance >= 1 slot: the arrival fast-forward
+        # above makes idle iterations rare, but total_steps feeds per-step
+        # utilisation metrics and must stay exact if the loop ever changes
+        # (e.g. wall-clock-paced ticking instead of fast-forward).
+        dispatched = pool.n_active > 0
         results.extend(pool.step(now))
-        total_steps += 1
+        if dispatched:
+            total_steps += 1
         now += 1
         if max_steps is not None and total_steps >= max_steps:
+            truncated = bool(pending or waiting or pool.n_active)
+            results.extend(pool.drain(now - 1))
             break
 
     wall = time.perf_counter() - t0
@@ -253,5 +340,6 @@ def serve_requests(
         p50_turnaround_steps=float(np.percentile(tas, 50)) if len(tas) else 0.0,
         p95_turnaround_steps=float(np.percentile(tas, 95)) if len(tas) else 0.0,
         sparsity=pool.measured_sparsity(),
+        truncated=truncated,
     )
     return results, stats

@@ -10,7 +10,10 @@ from repro.core import apply_cbtd, blen_for, cbcsc_decode, cbcsc_encode
 from repro.kernels import ops, ref
 from repro.kernels.delta_encode import delta_encode_pallas
 from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
-from repro.kernels.stsp_spmv import stsp_spmv_pallas
+from repro.kernels.stsp_spmv import (
+    stsp_spmv_pallas,
+    stsp_spmv_scatter_batch_pallas,
+)
 
 TOL = {jnp.float32: dict(rtol=1e-6, atol=1e-6),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -134,6 +137,176 @@ def test_stsp_spmv_dtypes(dtype):
                          interpret=True)
     y_ref = ref.stsp_spmv_ref(enc_t.val, enc_t.lidx, idx, ds_vals, enc.s)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL[dtype])
+
+
+# -- batched scatter kernel + dense-gather fallback -------------------------
+#
+# Parity sweep of every batched SpMV implementation against the per-row
+# one-hot oracle (ref.stsp_spmv_ref) over (S, M, BLEN, K, B) shapes spanning
+# both regimes of the path heuristic: S*(1-gamma) < 1 (scatter wins) and
+# >= 1 (dense-gather mirror wins).
+
+
+def _batched_case(seed, h, q, m, gamma, k, b):
+    w, enc = _cbcsc_case(seed, h, q, m, gamma)
+    keys = jax.random.split(jax.random.key(seed + 1), b)
+    idx = jax.vmap(lambda kk: jax.random.permutation(kk, q)[:k])(keys)
+    idx = idx.astype(jnp.int32)
+    ds = jax.random.normal(jax.random.key(seed + 2), (b, k))
+    y_ref = jnp.stack([ref.stsp_spmv_ref(enc.val, enc.lidx, idx[i], ds[i],
+                                         enc.s) for i in range(b)])
+    return w, enc, idx, ds, y_ref
+
+
+# (h, q, m, gamma, k, b): s = h/m in {4, 8, 16, 32, 128}, blen in {1..8}
+BATCH_SWEEP = [
+    (32, 16, 8, 0.75, 4, 1),        # s=4,  blen=1, single slot
+    (64, 32, 8, 0.75, 8, 3),        # s=8,  blen=2
+    (128, 96, 16, 0.9, 16, 4),      # s=8,  blen=1
+    (256, 128, 16, 0.9375, 24, 5),  # s=16, blen=1 (paper's gamma)
+    (256, 128, 8, 0.5, 32, 2),      # s=32, blen=16, half-dense
+    (2048, 256, 16, 0.9375, 48, 8), # s=128: the old one-hot cliff regime
+]
+
+
+@pytest.mark.parametrize("h,q,m,gamma,k,b", BATCH_SWEEP)
+def test_scatter_batch_kernel_parity_sweep(h, q, m, gamma, k, b):
+    _, enc, idx, ds, y_ref = _batched_case(h + q + b, h, q, m, gamma, k, b)
+    y = stsp_spmv_scatter_batch_pallas(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("h,q,m,gamma,k,b", BATCH_SWEEP)
+def test_dense_gather_batch_parity_sweep(h, q, m, gamma, k, b):
+    _, enc, idx, ds, y_ref = _batched_case(h + q + b, h, q, m, gamma, k, b)
+    w_dense = cbcsc_decode(enc, jnp.float32)
+    y = ops.delta_spmv_dense_gather_batch(w_dense, idx, ds)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # and through the public batched entry point's w_dense route:
+    y2 = ops.stsp_spmv_batch(enc.val, enc.lidx, idx, ds, s=enc.s,
+                             w_dense=w_dense)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+@pytest.mark.parametrize("h,q,m,gamma,k,b", BATCH_SWEEP)
+def test_scatter_ref_matches_onehot_ref(h, q, m, gamma, k, b):
+    _, enc, idx, ds, y_ref = _batched_case(h + q + b, h, q, m, gamma, k, b)
+    y = jnp.stack([ref.stsp_spmv_scatter_ref(enc.val, enc.lidx, idx[i],
+                                             ds[i], enc.s) for i in range(b)])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_batch_kernel_duplicate_columns_accumulate():
+    """A column listed twice in one slot's NZI list contributes twice —
+    the scatter-add must accumulate, not overwrite."""
+    w, enc = _cbcsc_case(9, 64, 32, 8, 0.5)
+    idx = jnp.array([[5, 5, 7], [7, 5, 5]], jnp.int32)
+    ds = jnp.array([[1.0, 1.0, 0.5], [0.5, 1.0, 1.0]])
+    y = stsp_spmv_scatter_batch_pallas(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                       interpret=True)
+    expect = 2.0 * w[:, 5] + 0.5 * w[:, 7]
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y[1]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    y_d = ops.delta_spmv_dense_gather_batch(cbcsc_decode(enc, jnp.float32),
+                                            idx, ds)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_batch_kernel_padding_is_noop():
+    """Padded NZI slots (idx=0, ds=0) must not perturb the accumulator even
+    though their CBCSC slab is fetched and scattered."""
+    w, enc = _cbcsc_case(7, 64, 32, 8, 0.75)
+    idx = jnp.array([[3, 10, 0, 0]], jnp.int32)
+    ds = jnp.array([[1.0, -2.0, 0.0, 0.0]])
+    y = stsp_spmv_scatter_batch_pallas(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                       interpret=True)
+    expect = w[:, 3] * 1.0 + w[:, 10] * (-2.0)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_batch_kernel_padded_lidx_duplicates():
+    """BLEN-padding entries all carry lidx=0 (duplicate local indices with
+    val=0): the scatter must add exact zeros at row 0, not corrupt it.
+    Forced by encoding with blen > max occupancy."""
+    h, q, m = 64, 24, 8
+    w = apply_cbtd(jax.random.normal(jax.random.key(3), (h, q)) + 0.01,
+                   0.75, m, 1.0)
+    enc = cbcsc_encode(w, m, blen=blen_for(h, m, 0.75) + 3)  # extra padding
+    idx = jnp.array([[1, 4, 9]], jnp.int32)
+    ds = jnp.array([[0.3, -1.2, 2.0]])
+    y = stsp_spmv_scatter_batch_pallas(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                       interpret=True)
+    expect = 0.3 * w[:, 1] - 1.2 * w[:, 4] + 2.0 * w[:, 9]
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stsp_spmv_batch_all_paths_agree():
+    """Public batched entry point: XLA scatter, Pallas scatter and dense
+    mirror must agree on the same inputs."""
+    _, enc, idx, ds, y_ref = _batched_case(77, 128, 64, 16, 0.875, 12, 4)
+    y_xla = ops.stsp_spmv_batch(enc.val, enc.lidx, idx, ds, s=enc.s)
+    y_pal = ops.stsp_spmv_batch(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                use_pallas=True)
+    y_den = ops.stsp_spmv_batch(enc.val, enc.lidx, idx, ds, s=enc.s,
+                                w_dense=cbcsc_decode(enc, jnp.float32))
+    for y in (y_xla, y_pal, y_den):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_path_heuristic():
+    """Large-S models must route to the dense mirror (never the O(S) path);
+    small-S CBCSC stays on the scatter kernel."""
+    assert ops.spmv_use_dense_gather(s=128, gamma=0.9375)   # 8 >= 1
+    assert ops.spmv_use_dense_gather(s=32, gamma=0.75)      # 8 >= 1
+    assert not ops.spmv_use_dense_gather(s=8, gamma=0.9375)  # 0.5 < 1
+    assert not ops.spmv_use_dense_gather(s=15, gamma=0.9375)
+
+
+# -- CBCSC pack-time BLEN enforcement (clip mode) ----------------------------
+# (lives here, not in test_cbcsc.py, because that module importorskips on
+# hypothesis and these regressions must always run)
+
+
+def test_cbcsc_overflow_clip_keeps_largest():
+    """on_overflow='clip' enforces BLEN by dropping the smallest-|w|
+    nonzeros per subcolumn; survivors decode exactly, dropped become 0."""
+    # one column, M=1, S=4: subcolumn [1, -3, 2, -0.5], BLEN=2
+    w = jnp.array([[1.0], [-3.0], [2.0], [-0.5]])
+    enc = cbcsc_encode(w, m=1, blen=2, on_overflow="clip")
+    dec = np.asarray(cbcsc_decode(enc))
+    np.testing.assert_allclose(dec[:, 0], [0.0, -3.0, 2.0, 0.0])
+    assert int(np.asarray(enc.valid).sum()) == 2
+
+
+def test_cbcsc_overflow_clip_is_lossless_when_balanced():
+    """Clip mode on an already-balanced matrix == raise-mode encoding."""
+    w = apply_cbtd(jax.random.normal(jax.random.key(5), (32, 8)) + 0.01,
+                   0.75, 4, 1.0)
+    blen = blen_for(32, 4, 0.75)
+    a = cbcsc_encode(w, 4, blen=blen)
+    b = cbcsc_encode(w, 4, blen=blen, on_overflow="clip")
+    np.testing.assert_array_equal(np.asarray(a.val), np.asarray(b.val))
+    np.testing.assert_array_equal(np.asarray(a.lidx), np.asarray(b.lidx))
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+
+
+def test_cbcsc_overflow_clip_preserves_stream_order():
+    """Survivors keep Alg. 3's ascending-k order inside each subcolumn
+    even though selection is by magnitude."""
+    w = jnp.array([[0.5], [0.0], [3.0], [-2.0]])   # M=1, S=4, k order
+    enc = cbcsc_encode(w, m=1, blen=2, on_overflow="clip")
+    np.testing.assert_array_equal(np.asarray(enc.lidx).ravel(), [2, 3])
+    np.testing.assert_allclose(np.asarray(enc.val).ravel(), [3.0, -2.0])
 
 
 # -- wrapper-level integration ----------------------------------------------

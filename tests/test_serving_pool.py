@@ -147,6 +147,141 @@ def test_idle_slots_frozen(engines):
     np.testing.assert_array_equal(steps, [1, 1])
 
 
+def test_step_frames_matches_step_batch(engines):
+    """Device-resident frame buffers + device cursor == host-staged frames:
+    the two step entry points produce identical logits and state."""
+    _, eb = engines
+    feats = [_utterance(50 + i, 6) for i in range(2)]
+    frames = jnp.asarray(np.stack(feats))          # [B=2, T=6, D]
+
+    s_host = eb.init_state(2)
+    s_dev = eb.init_state(2)
+    for t in range(6):
+        x = np.stack([f[t] for f in feats])
+        active = np.ones(2, bool)
+        reset = np.full(2, t == 0)
+        s_host, l_host = eb.step_batch(s_host, x, active, reset)
+        s_dev, l_dev = eb.step_frames(s_dev, frames, active, reset)
+        np.testing.assert_array_equal(np.asarray(l_host), np.asarray(l_dev))
+    for a, b in zip(jax.tree.leaves(s_host.layers),
+                    jax.tree.leaves(s_dev.layers)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the device cursor advanced once per consumed frame:
+    np.testing.assert_array_equal(np.asarray(s_dev.cursor), [6, 6])
+
+
+def test_step_frames_cursor_resets_midstream(engines):
+    """Re-admitting a new session into a used slot restarts its device
+    cursor at frame 0 (reset mask), without touching the neighbour slot."""
+    _, eb = engines
+    frames = jnp.asarray(np.stack([_utterance(60, 5), _utterance(61, 5)]))
+    state = eb.init_state(2)
+    active = np.ones(2, bool)
+    for t in range(3):
+        state, _ = eb.step_frames(state, frames, active, np.full(2, t == 0))
+    # slot 0 re-admitted (reset), slot 1 keeps streaming:
+    state, _ = eb.step_frames(state, frames, active, np.array([True, False]))
+    np.testing.assert_array_equal(np.asarray(state.cursor), [1, 4])
+
+
+def test_weight_sparsity_enforced_on_unpruned_model():
+    """Regression: packing an UNpruned (or partially pruned) model used to
+    derive BLEN from max occupancy, voiding the format and reporting ~0
+    weight sparsity.  Pack time now enforces blen_for(gamma) by clipping
+    and reports the clipped count."""
+    cfg = lstm_am.LSTMAMConfig(input_dim=INPUT_DIM, hidden_dim=HIDDEN,
+                               n_layers=2, n_classes=CLASSES)
+    params = lstm_am.init_params(jax.random.key(3), cfg)   # no pruning
+    ecfg = EngineConfig(theta=THETA, gamma=GAMMA, m=M)
+    engine = SpartusEngine(params, cfg, ecfg)
+    # BLEN/S = 1 - gamma, so structural sparsity can no longer collapse:
+    assert engine.weight_sparsity() >= GAMMA - 0.01
+    assert engine.pack_overflow_count() > 0
+    for layer in engine.layers:
+        assert layer.enc.blen == layer.enc.s - int(layer.enc.s * GAMMA)
+
+
+def test_pack_overflow_zero_for_pruned_model(engines):
+    """A properly CBTD-pruned model fits blen_for(gamma) exactly — the
+    clip must be a no-op."""
+    e1, _ = engines
+    assert e1.pack_overflow_count() == 0
+    assert e1.weight_sparsity() == pytest.approx(GAMMA, abs=0.03)
+
+
+def test_max_steps_drains_partial_results(engines):
+    """Regression: max_steps used to silently drop all logits of unfinished
+    sessions.  They now surface as truncated RequestResults holding the
+    frames produced so far, and the stats carry a truncated flag."""
+    e1, eb = engines
+    feats = [_utterance(70, 8), _utterance(71, 8)]
+    reqs = [StreamRequest(0, 0, feats[0]), StreamRequest(1, 0, feats[1])]
+    results, stats = serve_requests(eb, reqs, capacity=2, max_steps=3)
+
+    assert stats.truncated
+    assert stats.total_steps == 3
+    assert [r.req_id for r in results] == [0, 1]
+    for r in results:
+        assert r.truncated
+        assert r.logits.shape[0] == 3           # partial: 3 of 8 frames
+        ref = np.asarray(e1.run_utterance(jnp.asarray(feats[r.req_id])))
+        np.testing.assert_allclose(r.logits, ref[:3], atol=1e-5)
+
+    # a run that completes is not truncated:
+    results2, stats2 = serve_requests(eb, reqs, capacity=2)
+    assert not stats2.truncated
+    assert all(not r.truncated for r in results2)
+    assert stats2.total_frames == 16
+
+
+def test_total_steps_counts_only_dispatching_ticks(engines):
+    """Regression: total_steps must count ticks that advanced >= 1 slot,
+    never idle time between arrival bursts — whether the gap is skipped by
+    the fast-forward or (in a future scheduler) ticked through idle."""
+    _, eb = engines
+    reqs = [StreamRequest(0, 0, _utterance(80, 3)),
+            StreamRequest(1, 10, _utterance(81, 3))]
+    results, stats = serve_requests(eb, reqs, capacity=1)
+    assert len(results) == 2
+    assert results[1].admit_step == 10          # idle gap fast-forwarded
+    assert stats.total_steps == 6               # 3 + 3 dispatching ticks
+    assert stats.total_frames == 6
+    # utilisation identity the old wall-tick counting broke: with capacity 1
+    # every counted step serves exactly one frame.
+    assert stats.total_frames == stats.total_steps
+
+    # and the pool-level invariant behind it: a tick with no active session
+    # dispatches nothing (the driver must not count it as a step).
+    from repro.serving.scheduler import SessionPool
+    pool = SessionPool(eb, capacity=2)
+    assert pool.step(now=0) == []
+    assert pool.n_active == 0
+
+
+def test_spmv_path_selection_parity(model):
+    """Forcing the scatter path and the dense-mirror path over the same
+    packed weights must agree (batch-1 and pooled)."""
+    params, cfg = model
+    outs = {}
+    for path in ("scatter", "dense"):
+        ecfg = EngineConfig(theta=THETA, gamma=GAMMA, m=M,
+                            capacity_frac=1.0, spmv_path=path)
+        e1 = SpartusEngine(params, cfg, ecfg)
+        eb = BatchedSpartusEngine(params, cfg, ecfg)
+        assert (e1.layers[0].w_dense is not None) == (path == "dense")
+        feats = _utterance(90, 6)
+        ref = np.asarray(e1.run_utterance(jnp.asarray(feats)))
+        results, _ = serve_requests(eb, [StreamRequest(0, 0, feats)],
+                                    capacity=2)
+        np.testing.assert_allclose(results[0].logits, ref, atol=1e-5)
+        outs[path] = ref
+    np.testing.assert_allclose(outs["scatter"], outs["dense"], atol=1e-4)
+
+    with pytest.raises(ValueError, match="spmv_path"):
+        SpartusEngine(params, cfg,
+                      EngineConfig(gamma=GAMMA, m=M, spmv_path="gather"))
+
+
 def test_batched_ops_match_unbatched():
     """kernels.ops *_batch entry points == per-row loop of the scalar ops."""
     key = jax.random.key(7)
