@@ -7,18 +7,25 @@ baseline of running the same requests *sequentially* through the batch-1
 identical (atol 1e-5) to the batch-1 engine's.
 
     PYTHONPATH=src python benchmarks/serving_bench.py
+    PYTHONPATH=src python benchmarks/serving_bench.py --chunk-frames 32
     PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate:
         fail unless capacity-16 aggregate frames/s >= 4x sequential
     PYTHONPATH=src python benchmarks/serving_bench.py --sweep   # slow CI gate:
         hidden in {128, 512} at m=16 / capacity 16 plus a forced-scatter
         leg, emits BENCH_serving.json, fails if the pool ever drops below
         the batch-1 engine (the crossover that regressed before the
-        scatter/dense-gather SpMV paths)
+        scatter/dense-gather SpMV paths); also runs the chunked tick loop
+        at chunk_frames in {1, 8, 32} vs the per-frame pool at hidden=128
+        and fails if chunk_frames=32 is slower than per-frame (the
+        dispatch-amortisation gate)
 
 Runs on CPU: the batch-1 engine pays ~8 XLA dispatches + 3 host syncs per
 (frame, layer) while the pool amortises one dispatch + one logits fetch
 across all slots per tick — the speedup below is that dispatch economy,
-before any accelerator parallelism.
+before any accelerator parallelism.  The chunked tick loop compounds it:
+one lax.scan dispatch advances all slots up to C frames and logits leave
+the device once per session (at retirement), so the per-tick Python /
+dispatch / fetch overhead is amortised C-fold on top.
 """
 from __future__ import annotations
 
@@ -62,7 +69,7 @@ def make_requests(n: int, frames: int, input_dim: int,
 def bench_config(hidden: int, layers: int, input_dim: int, classes: int,
                  frames: int, n_requests: int, caps: List[int], theta: float,
                  gamma: float, m: int, capacity_frac: float,
-                 spmv_path: str = "auto"):
+                 spmv_path: str = "auto", chunk_frames: int = 0):
     """One model configuration: sequential batch-1 baseline + the pool at
     each capacity, with per-request logits parity checked against the
     batch-1 engine.  Returns (report dict, parity_ok)."""
@@ -84,6 +91,7 @@ def bench_config(hidden: int, layers: int, input_dim: int, classes: int,
     t_seq = time.perf_counter() - t0
     seq_fps = total_frames / t_seq
     report = {"hidden": hidden, "m": m, "spmv_path": spmv_path,
+              "chunk_frames": chunk_frames,
               "sequential": {"frames_per_s": seq_fps, "wall_s": t_seq}}
     print(f"[bench] hidden={hidden} ({spmv_path}) sequential batch-1: "
           f"{n_requests} x {frames} frames in {t_seq:.2f}s -> "
@@ -95,9 +103,13 @@ def bench_config(hidden: int, layers: int, input_dim: int, classes: int,
         # warm-up compiles the step for this capacity outside the timing;
         # full-length feats so the warm-up hits the same frame-buffer bucket
         # as the timed run (a [:2] slice would bucket differently past 64
-        # frames and hide a recompile inside the timing):
-        serve_requests(eb, [StreamRequest(0, 0, reqs[0].feats)], cap)
-        results, stats = serve_requests(eb, reqs, capacity=cap)
+        # frames and hide a recompile inside the timing), and a full
+        # admission wave so the batched-upload variant is compiled too:
+        serve_requests(eb, [StreamRequest(i, 0, reqs[0].feats)
+                            for i in range(cap)], cap,
+                       chunk_frames=chunk_frames)
+        results, stats = serve_requests(eb, reqs, capacity=cap,
+                                        chunk_frames=chunk_frames)
         for r in results:
             if not np.allclose(r.logits, seq_logits[r.req_id], atol=1e-5):
                 parity_ok = False
@@ -110,11 +122,66 @@ def bench_config(hidden: int, layers: int, input_dim: int, classes: int,
     return report, parity_ok
 
 
+def bench_chunked(hidden: int, layers: int, input_dim: int, classes: int,
+                  frames: int, n_requests: int, cap: int, theta: float,
+                  gamma: float, m: int, capacity_frac: float,
+                  chunk_grid=(1, 8, 32)):
+    """Chunked tick loop vs the per-frame pool at one capacity: same
+    requests, logits parity pinned against the per-frame results, speedup
+    and dispatch amortisation reported per chunk_frames.  Returns
+    (report dict, parity_ok)."""
+    params, cfg = build_model(hidden, layers, input_dim, classes, gamma, m)
+    ecfg = EngineConfig(theta=theta, gamma=gamma, m=m,
+                        capacity_frac=capacity_frac)
+    eb = BatchedSpartusEngine(params, cfg, ecfg)
+    reqs = make_requests(n_requests, frames, input_dim)
+
+    def warm(chunk):
+        # full admission wave at full length: compiles the step, the
+        # batched upload and the retirement snapshot for the timed shapes
+        serve_requests(eb, [StreamRequest(i, 0, reqs[0].feats)
+                            for i in range(cap)], cap, chunk_frames=chunk)
+
+    warm(0)
+    base_results, base = serve_requests(eb, reqs, capacity=cap)
+    report = {"hidden": hidden, "m": m, "capacity": cap,
+              "per_frame": base.to_dict()}
+    print(f"[bench] hidden={hidden} capacity={cap} per-frame pool: "
+          f"{base.frames_per_s:8.0f} frames/s  "
+          f"({base.dispatches_per_frame:.3f} dispatches/frame)")
+
+    parity_ok = True
+    for chunk in chunk_grid:
+        warm(chunk)
+        results, stats = serve_requests(eb, reqs, capacity=cap,
+                                        chunk_frames=chunk)
+        for r in results:
+            if not np.allclose(r.logits, base_results[r.req_id].logits,
+                               atol=1e-5):
+                parity_ok = False
+                print(f"[bench] PARITY FAIL req {r.req_id} at "
+                      f"chunk_frames {chunk}")
+        speedup = stats.frames_per_s / base.frames_per_s
+        report[f"chunk_{chunk}"] = dict(stats.to_dict(),
+                                        speedup_vs_per_frame=speedup)
+        print(f"[bench] chunk_frames {chunk:3d}: {stats.frames_per_s:8.0f} "
+              f"frames/s ({speedup:4.1f}x per-frame)  "
+              f"{stats.dispatches_per_frame:.3f} dispatches/frame  "
+              f"host overlap {stats.host_overlap_frac:.0%}")
+    return report, parity_ok
+
+
 # sweep legs: (hidden, spmv_path).  The auto legs pin the dense-mirror route
 # (every gated config has S*(1-gamma) >= 1); the forced-scatter leg pins the
 # scatter kernels, which auto would otherwise never exercise here.
 SWEEP_LEGS = ((128, "auto"), (512, "auto"), (128, "scatter"))
 SWEEP_CAP = 16
+# chunked-vs-per-frame leg: hidden for the chunked tick-loop gate and the
+# chunk_frames grid recorded in BENCH_serving.json.  The gate requires the
+# largest chunk to be at least as fast as the per-frame pool; measured CPU
+# speedup at hidden=128 / capacity 16 is >= 3x (dispatch amortisation).
+SWEEP_CHUNK_HIDDEN = 128
+SWEEP_CHUNK_GRID = (1, 8, 32)
 
 
 def main() -> int:
@@ -130,6 +197,9 @@ def main() -> int:
     ap.add_argument("--gamma", type=float, default=0.9375)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--capacity-frac", type=float, default=0.5)
+    ap.add_argument("--chunk-frames", type=int, default=0,
+                    help="chunked tick loop: frames advanced per dispatch "
+                         "(0 = per-frame path)")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless capacity-16 (or max capacity) hits "
                          ">=4x sequential frames/s with matching logits")
@@ -147,9 +217,11 @@ def main() -> int:
         if args.check:
             ap.error("--sweep and --check are mutually exclusive gates")
         if args.m != ap.get_default("m") or \
-                args.capacities != ap.get_default("capacities"):
-            ap.error("--sweep fixes m=16 and capacity 16; "
-                     "drop --m/--capacities or run without --sweep")
+                args.capacities != ap.get_default("capacities") or \
+                args.chunk_frames != ap.get_default("chunk_frames"):
+            ap.error("--sweep fixes m=16, capacity 16 and its own "
+                     "chunk_frames grid; drop --m/--capacities/"
+                     "--chunk-frames or run without --sweep")
         emit = args.emit_json or "BENCH_serving.json"
         report = {}
         ok = True
@@ -168,6 +240,24 @@ def main() -> int:
             report[f"hidden_{hidden}_{path}"] = dict(
                 rep, parity=parity,
                 frames_per_s=rep[f"capacity_{SWEEP_CAP}"]["frames_per_s"])
+        # chunked tick-loop gate: the biggest chunk must never be slower
+        # than the per-frame pool (it measures >= 3x on CPU; the CI floor
+        # is 1x so a noisy shared runner cannot flake the job):
+        crep, cparity = bench_chunked(
+            SWEEP_CHUNK_HIDDEN, args.layers, args.input_dim, args.classes,
+            args.frames, args.requests, SWEEP_CAP, args.theta, args.gamma,
+            m=16, capacity_frac=args.capacity_frac,
+            chunk_grid=SWEEP_CHUNK_GRID)
+        cmax = max(SWEEP_CHUNK_GRID)
+        cspeed = crep[f"chunk_{cmax}"]["speedup_vs_per_frame"]
+        cfast = cspeed >= 1.0
+        print(f"[bench] sweep chunked hidden={SWEEP_CHUNK_HIDDEN}: parity="
+              f"{'ok' if cparity else 'FAIL'} chunk_{cmax}="
+              f"{cspeed:.1f}x per-frame -> "
+              f"{'PASS' if (cparity and cfast) else 'FAIL'}")
+        ok = ok and cparity and cfast
+        report[f"chunked_hidden_{SWEEP_CHUNK_HIDDEN}"] = dict(
+            crep, parity=cparity)
         if args.json:
             print(json.dumps(report, indent=2))
         with open(emit, "w") as f:
@@ -179,7 +269,7 @@ def main() -> int:
     report, parity_ok = bench_config(
         args.hidden, args.layers, args.input_dim, args.classes, args.frames,
         args.requests, caps, args.theta, args.gamma, args.m,
-        args.capacity_frac)
+        args.capacity_frac, chunk_frames=args.chunk_frames)
 
     if args.json:
         print(json.dumps(report, indent=2))

@@ -74,15 +74,34 @@ def select_active_columns(
 
     Deterministic policy: if more than ``capacity`` deltas fired, keep the
     largest |delta| (drop-smallest overflow, DESIGN.md §9); padding slots
-    get idx=0, val=0.  Returns (idx [K] int32, vals [K], n_dropped)."""
+    get idx=0, val=0.  Returns (idx [K] int32, vals [K], n_dropped).
+
+    Implemented with ``lax.top_k`` on the magnitudes (un-fired slots
+    masked to -1): ~5x faster than the full argsort it replaces, and
+    bit-identical — top_k orders descending and breaks ties toward the
+    lower index, exactly like the old stable ascending argsort of the
+    negated magnitudes (the per-frame serving hot path spent more time in
+    this sort than in the SpMV itself)."""
+    idx, vals, n_dropped = _select_active_columns_batch(delta[None], capacity)
+    return idx[0], vals[0], n_dropped[0]
+
+
+def _select_active_columns_batch(
+    delta: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched NZI/NZV core shared by the scalar and _batch wrappers.
+    delta [B, F] -> (idx [B, K] int32, vals [B, K], n_dropped [B])."""
+    k = min(capacity, delta.shape[-1])
     mag = jnp.abs(delta)
     fired = delta != 0
-    neg = jnp.where(fired, -mag, 1.0)            # actives first, by magnitude
-    order = jnp.argsort(neg)[:capacity]
-    valid = fired[order]
-    idx = jnp.where(valid, order, 0).astype(jnp.int32)
-    vals = jnp.where(valid, delta[order], 0).astype(delta.dtype)
-    n_dropped = jnp.maximum(jnp.sum(fired.astype(jnp.int32)) - capacity, 0)
+    masked = jnp.where(fired, mag, -1.0)         # fired mags are > 0
+    top_mag, top_idx = jax.lax.top_k(masked, k)
+    valid = top_mag > 0
+    idx = jnp.where(valid, top_idx, 0).astype(jnp.int32)
+    vals = jnp.where(valid, jnp.take_along_axis(delta, top_idx, axis=-1),
+                     0).astype(delta.dtype)
+    n_dropped = jnp.maximum(
+        jnp.sum(fired.astype(jnp.int32), axis=-1) - capacity, 0)
     return idx, vals, n_dropped
 
 
@@ -144,9 +163,10 @@ def select_active_columns_batch(
     delta: jax.Array, capacity: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Batched NZI/NZV list builder.  delta: [B, F] ->
-    (idx [B, K] int32, vals [B, K], n_dropped [B])."""
-    fn = functools.partial(select_active_columns, capacity=capacity)
-    return jax.vmap(fn)(delta)
+    (idx [B, K] int32, vals [B, K], n_dropped [B]).  Runs the batched
+    top_k directly (not a vmap of the scalar op) so the one sort covers
+    the whole pool."""
+    return _select_active_columns_batch(delta, capacity)
 
 
 def spmv_use_dense_gather(s: int, gamma: float) -> bool:
@@ -204,6 +224,41 @@ def lstm_pointwise_batch(
     return jax.vmap(fn)(dm, c)
 
 
+def gather_frames(frames: jax.Array, cursor: jax.Array) -> jax.Array:
+    """Gather each slot's current frame from its device-resident buffer.
+
+    frames [B, T_buf, D], cursor [B] int32 -> x [B, D].  The cursor is
+    clamped to the buffer (slots whose cursor ran past their utterance are
+    masked inactive by the caller, so the clamped garbage row is never
+    consumed).  Deliberately not jit-wrapped: it is traced inline by the
+    serving step/chunk functions — including inside `jax.lax.scan`, where
+    the chunked tick loop (batched_engine.step_chunk) calls it once per
+    scan iteration with the carried cursor."""
+    b, t_buf, _ = frames.shape
+    return frames[jnp.arange(b), jnp.minimum(cursor, t_buf - 1)]
+
+
+def bank_rows(
+    buf: jax.Array, rows: jax.Array, start: jax.Array
+) -> jax.Array:
+    """Bank one chunk's stacked logits into the per-slot output buffers.
+
+    buf [B, T_pad, C], rows [N, B, C] (a lax.scan's stacked per-iteration
+    outputs), start [B] int32 -> updated buf, where slot b's rows land at
+    ``buf[b, start[b] : start[b]+N]``.  One vmapped dynamic_update_slice
+    per chunk — far cheaper on CPU than a scatter per scan iteration.
+    The caller guarantees ``start[b] + N <= T_pad`` (the serving pool pads
+    the buffer's time axis by chunk_frames), so the slice never clamps;
+    rows written past a session's utterance length are scratch that no
+    reader ever consumes (retirement fetches ``[:n_frames]``)."""
+    per_slot = jnp.swapaxes(rows, 0, 1)          # [B, N, C]
+
+    def one(buf_b, rows_b, start_b):
+        return jax.lax.dynamic_update_slice(buf_b, rows_b, (start_b, 0))
+
+    return jax.vmap(one)(buf, per_slot, start)
+
+
 def delta_spmv_dense_gather(
     w: jax.Array, idx: jax.Array, ds_vals: jax.Array
 ) -> jax.Array:
@@ -213,6 +268,59 @@ def delta_spmv_dense_gather(
     batch-1 leg of the large-S dense mirror path (spmv_use_dense_gather)."""
     panel = jnp.take(w, idx, axis=1)             # [H, K]
     return panel @ ds_vals
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def delta_spmv_dense_topk_batch(
+    wt: jax.Array, delta: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused capacity enforcement + dense-mirror SpMV: wt [Q, H]
+    (pre-transposed mirror), delta [B, Q] -> (y [B, H], n_dropped [B]).
+
+    The dense-mirror path never consumes the NZI/NZV *lists* — only the
+    dense delta slab with the over-capacity tail zeroed.  So instead of
+    top_k -> gather -> scatter-back-to-dense (the scatter dominated the
+    serving step at hidden=128), enforce capacity directly in the dense
+    domain: keep a column iff its |delta| beats the K-th largest, with
+    boundary ties broken toward the lower index via a cumulative tie
+    rank.  That reproduces ``select_active_columns_batch`` +
+    ``delta_spmv_dense_gather_batch`` BIT-EXACTLY (same kept set, same
+    GEMM contraction).  Two more CPU-motivated savings:
+
+      * the clip runs under a ``lax.cond`` on "did ANY row overflow" —
+        at serving sparsity the NZI capacity almost never binds, so the
+        steady state pays one reduction instead of a top_k + cumsum
+        (whose XLA CPU lowering costs more than the GEMM itself);
+      * the mirror is stored pre-transposed [Q, H]: XLA does not hoist
+        the transpose of `w.T` out of the per-tick dot on CPU, which
+        made the un-transposed GEMM ~3x slower.
+
+    ``capacity >= Q`` (nothing can ever drop) skips the cond too."""
+    b, q = delta.shape
+    k = min(capacity, q)
+    fired = delta != 0
+    n_fired = jnp.sum(fired.astype(jnp.int32), axis=-1)
+    n_dropped = jnp.maximum(n_fired - capacity, 0)
+
+    def clip(d):
+        mag = jnp.abs(d)
+        masked = jnp.where(d != 0, mag, -1.0)
+        top_mag, _ = jax.lax.top_k(masked, k)
+        thresh = top_mag[:, -1:]                  # K-th largest (or -1)
+        above = (d != 0) & (mag > thresh)
+        ties = (d != 0) & (mag == thresh)
+        n_above = jnp.sum(above.astype(jnp.int32), axis=-1, keepdims=True)
+        tie_rank = jnp.cumsum(ties.astype(jnp.int32), axis=-1)
+        keep = above | (ties & (tie_rank <= k - n_above))
+        return jnp.where(keep, d, 0.0)
+
+    if k >= q:
+        ds_dense = delta                          # un-fired entries are 0
+    else:
+        ds_dense = jax.lax.cond(
+            jnp.any(n_dropped > 0), clip, lambda d: d, delta)
+    y = ds_dense.astype(jnp.float32) @ wt.astype(jnp.float32)
+    return y, n_dropped
 
 
 def delta_spmv_dense_gather_batch(

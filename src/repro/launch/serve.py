@@ -6,6 +6,8 @@ continuous-batching session pool with --pool N).
         --batch 4 --steps 32
     PYTHONPATH=src python -m repro.launch.serve --spartus --theta 0.2
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --requests 24
+    PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 \
+        --chunk-frames 32    # chunked device tick loop (1 dispatch / 32 frames)
 """
 from __future__ import annotations
 
@@ -83,12 +85,18 @@ def serve_spartus(args):
                                  np.float32))
             for i in range(n_req)
         ]
-        results, stats = serve_requests(engine, reqs, capacity=args.pool)
-        print(f"[serve] pool({args.pool}): {stats.n_requests} sessions / "
-              f"{stats.total_frames} frames in {stats.wall_s:.2f}s -> "
-              f"{stats.frames_per_s:.0f} frames/s, latency "
+        results, stats = serve_requests(engine, reqs, capacity=args.pool,
+                                        chunk_frames=args.chunk_frames)
+        mode = (f"chunked x{args.chunk_frames}" if args.chunk_frames
+                else "per-frame")
+        print(f"[serve] pool({args.pool}, {mode}): {stats.n_requests} "
+              f"sessions / {stats.total_frames} frames in {stats.wall_s:.2f}s "
+              f"-> {stats.frames_per_s:.0f} frames/s, latency "
               f"p50 {stats.p50_latency_s*1e3:.0f} ms / "
               f"p95 {stats.p95_latency_s*1e3:.0f} ms")
+        print(f"[serve] dispatch economy: {stats.n_dispatches} dispatches "
+              f"({stats.dispatches_per_frame:.3f}/frame), host overlap "
+              f"{stats.host_overlap_frac:.0%}")
         sp = stats.sparsity
         print(f"[serve] temporal sparsity {sp['temporal_sparsity']:.1%}, "
               f"weight sparsity {engine.weight_sparsity():.1%} "
@@ -133,6 +141,9 @@ def main():
                     help="session-pool capacity (0 = batch-1 engine)")
     ap.add_argument("--requests", type=int, default=16,
                     help="number of streaming requests for --pool mode")
+    ap.add_argument("--chunk-frames", type=int, default=0,
+                    help="--pool mode: frames advanced per device dispatch "
+                         "(0 = per-frame ticks)")
     args = ap.parse_args()
     if args.spartus:
         serve_spartus(args)

@@ -7,9 +7,10 @@ module is its server-grade twin: the per-layer state of every session in
 a fixed-capacity pool is stored as stacked device slabs
 (`BatchedLayerState`, shapes `[B, ...]`), and `step_batch` runs
 
-    IPU   delta_encode_batch          (vmap over slots)
-    CTRL  select_active_columns_batch
-    MACs  stsp_spmv_batch             (CBCSC weights broadcast)
+    IPU   delta_encode_batch            (vmap over slots)
+    CTRL  select_active_columns_batch   (scatter route; the dense-mirror
+    MACs  stsp_spmv_batch                route fuses both into
+                                         delta_spmv_dense_topk_batch)
     HPE   lstm_pointwise_batch
 
 for every layer, plus the FCL/logit head, inside one jit.  An `active`
@@ -18,12 +19,19 @@ a `reset` mask re-initialises slots at admission time so attach/detach
 never recompiles.  Telemetry is accumulated on device (telemetry.py) and
 fetched only when `measured_sparsity` is called.
 
-Two step entry points share the same core: `step_batch` takes this
-tick's host-staged frames `x [B, D]` (reference semantics, tests), while
+Three step entry points share the same core: `step_batch` takes this
+tick's host-staged frames `x [B, D]` (reference semantics, tests);
 `step_frames` reads from pre-uploaded per-slot feature buffers
 `[B, T_buf, D]` indexed by the device cursor in `PoolState` — the
 steady-state serving tick (`SessionPool.step`) therefore performs no
-host->device frame copy at all.
+host->device frame copy at all; and `step_chunk` advances every active
+slot up to `n_frames` frames in ONE dispatch via `jax.lax.scan` over the
+same core, banking each frame's logits in a per-slot device output
+buffer `[B, T_buf, n_classes]` instead of returning them per tick — a
+finished slot's logits leave the device once, at retirement.  The
+serving-path functions (`step_frames`, `step_chunk`) donate the incoming
+`PoolState` (and the chunk output buffer), so the state slabs are reused
+in place tick over tick instead of reallocating.
 
 Per-slot numerics are identical to `SpartusEngine`: the batched kernels
 are vmaps of the very same ops, so a session's logits do not depend on
@@ -81,7 +89,15 @@ class BatchedSpartusEngine(PackedSpartusModel):
                  cfg: EngineConfig = EngineConfig()):
         super().__init__(am_params, am_cfg, cfg)
         self._step = jax.jit(self._step_impl)
-        self._step_frames = jax.jit(self._step_frames_impl)
+        # serving paths donate the incoming PoolState (and the chunk's
+        # output buffer) so the slabs are reused in place, never
+        # reallocated per tick; step_batch stays non-donating because the
+        # tests use it as the reference oracle and may re-step old states.
+        self._step_frames = jax.jit(self._step_frames_impl,
+                                    donate_argnums=(0,))
+        self._step_chunk = jax.jit(self._step_chunk_impl,
+                                   static_argnames=("n_frames",),
+                                   donate_argnums=(0, 5))
 
     # -- state management ----------------------------------------------------
 
@@ -92,39 +108,63 @@ class BatchedSpartusEngine(PackedSpartusModel):
             cursor=jnp.zeros((n_slots,), jnp.int32),
         )
 
-    # -- the batched step ----------------------------------------------------
+    def init_out_buf(self, n_slots: int, t_buf: int) -> jax.Array:
+        """Per-slot device logits buffer for the chunked tick loop."""
+        return jnp.zeros((n_slots, t_buf, self.n_classes), jnp.float32)
 
-    def _step_core(
-        self, state: PoolState, x: jax.Array, active: jax.Array,
-        reset: jax.Array, cursor: jax.Array,
-    ) -> Tuple[PoolState, jax.Array]:
-        cfg = self.cfg
-        n_slots = x.shape[0]
-        tel = state.telemetry
-        new_layers = []
-        h = x
-        for li, (layer, st) in enumerate(zip(self.layers, state.layers)):
-            # admission-time reset, fused into the step (no extra dispatch):
+    def _apply_reset(
+        self, state: PoolState, reset: jax.Array, *, reset_cursor: bool,
+    ) -> PoolState:
+        """Re-initialise reset slots' layer state (and optionally their
+        device cursor) — admission, fused into the step/chunk dispatch so
+        attach never costs an extra dispatch or recompiles.  Applied ONCE
+        per dispatch, at the boundary: inside a chunk no slot resets."""
+        n_slots = state.cursor.shape[0]
+        rm = reset[:, None]
+        layers = []
+        for layer, st in zip(self.layers, state.layers):
             fresh = _fresh_layer_state(layer, n_slots)
-            rm = reset[:, None]
-            st = BatchedLayerState(
+            layers.append(BatchedLayerState(
                 s_hat=jnp.where(rm, fresh.s_hat, st.s_hat),
                 c=jnp.where(rm, fresh.c, st.c),
                 h=jnp.where(rm, fresh.h, st.h),
                 dm=jnp.where(rm, fresh.dm, st.dm),
-            )
+            ))
+        cursor = jnp.where(reset, 0, state.cursor) if reset_cursor \
+            else state.cursor
+        return PoolState(tuple(layers), state.telemetry, cursor)
+
+    # -- the batched step ----------------------------------------------------
+
+    def _step_core(
+        self, state: PoolState, x: jax.Array, active: jax.Array,
+        cursor: jax.Array,
+    ) -> Tuple[PoolState, jax.Array]:
+        cfg = self.cfg
+        n_slots = x.shape[0]
+        new_layers = []
+        nnz_layers, dropped_layers = [], []
+        h = x
+        for layer, st in zip(self.layers, state.layers):
             s = jnp.concatenate([h, st.h], axis=-1)           # [B, D+H]
             delta, s_hat, nnz = ops.delta_encode_batch(
                 s, st.s_hat, cfg.theta, use_pallas=cfg.use_pallas
             )
-            idx, vals, dropped = ops.select_active_columns_batch(
-                delta, layer.capacity
-            )
-            y = ops.stsp_spmv_batch(
-                layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
-                use_pallas=cfg.use_pallas, w_dense=layer.w_dense,
-            ).astype(st.dm.dtype)
-            dm = st.dm + y
+            if layer.w_dense_t is not None:
+                # dense-mirror route: capacity enforced in the dense
+                # domain (no NZI list, no scatter) — bit-identical to the
+                # select + dense-gather chain, measurably faster on CPU.
+                y, dropped = ops.delta_spmv_dense_topk_batch(
+                    layer.w_dense_t, delta, layer.capacity)
+            else:
+                idx, vals, dropped = ops.select_active_columns_batch(
+                    delta, layer.capacity
+                )
+                y = ops.stsp_spmv_batch(
+                    layer.enc.val, layer.enc.lidx, idx, vals,
+                    s=layer.enc.s, use_pallas=cfg.use_pallas,
+                )
+            dm = st.dm + y.astype(st.dm.dtype)
             h_new, c_new = ops.lstm_pointwise_batch(
                 dm.reshape(n_slots, 4, layer.hidden_dim), st.c,
                 use_pallas=cfg.use_pallas,
@@ -136,8 +176,12 @@ class BatchedSpartusEngine(PackedSpartusModel):
                 h=jnp.where(am, h_new, st.h),
                 dm=jnp.where(am, dm, st.dm),
             ))
-            tel = tele.accumulate(tel, li, nnz, dropped, active)
+            nnz_layers.append(nnz)
+            dropped_layers.append(dropped)
             h = h_new
+        tel = tele.accumulate_layers(
+            state.telemetry, jnp.stack(nnz_layers),
+            jnp.stack(dropped_layers), active)
         h = jax.nn.relu(h @ self.fcl["w"].T + self.fcl["b"])
         logits = h @ self.logit["w"].T + self.logit["b"]
         return PoolState(tuple(new_layers), tel, cursor), logits
@@ -148,7 +192,8 @@ class BatchedSpartusEngine(PackedSpartusModel):
     ) -> Tuple[PoolState, jax.Array]:
         # legacy host-staged entry: the caller supplies this tick's frames,
         # the device cursor rides along untouched.
-        return self._step_core(state, x, active, reset, state.cursor)
+        state = self._apply_reset(state, reset, reset_cursor=False)
+        return self._step_core(state, x, active, state.cursor)
 
     def _step_frames_impl(
         self, state: PoolState, frames: jax.Array, active: jax.Array,
@@ -157,11 +202,38 @@ class BatchedSpartusEngine(PackedSpartusModel):
         # device-resident entry: gather each slot's current frame from the
         # pre-uploaded [B, T_buf, D] buffers by the cursor carried in
         # PoolState — a tick moves zero frame bytes host -> device.
-        n_slots, t_buf, _ = frames.shape
-        cur = jnp.where(reset, 0, state.cursor)
-        x = frames[jnp.arange(n_slots), jnp.minimum(cur, t_buf - 1)]
-        new_cur = cur + active.astype(cur.dtype)
-        return self._step_core(state, x, active, reset, new_cur)
+        state = self._apply_reset(state, reset, reset_cursor=True)
+        x = ops.gather_frames(frames, state.cursor)
+        new_cur = state.cursor + active.astype(state.cursor.dtype)
+        return self._step_core(state, x, active, new_cur)
+
+    def _step_chunk_impl(
+        self, state: PoolState, frames: jax.Array, lengths: jax.Array,
+        active: jax.Array, reset: jax.Array, out_buf: jax.Array,
+        *, n_frames: int,
+    ) -> Tuple[PoolState, jax.Array]:
+        # chunked entry: admission resets happen once at the chunk
+        # boundary, then lax.scan advances every slot up to n_frames
+        # frames with zero host involvement.  A slot whose cursor reaches
+        # its utterance length mid-chunk goes inactive for the remaining
+        # iterations: its state freezes and it contributes no telemetry —
+        # exactly as if the host had masked it.  The scan stacks each
+        # iteration's logits (static-offset writes), and ONE vmapped
+        # dynamic-slice banks the whole [C, B, n_classes] block into the
+        # per-slot output buffers at the chunk-start cursors; rows past a
+        # session's length are scratch no reader consumes.
+        state = self._apply_reset(state, reset, reset_cursor=True)
+        start = state.cursor
+
+        def body(st, _):
+            act = jnp.logical_and(active, st.cursor < lengths)
+            x = ops.gather_frames(frames, st.cursor)
+            new_st, logits = self._step_core(
+                st, x, act, st.cursor + act.astype(st.cursor.dtype))
+            return new_st, logits
+
+        state, ys = jax.lax.scan(body, state, None, length=n_frames)
+        return state, ops.bank_rows(out_buf, ys, start)
 
     def step_batch(
         self, state: PoolState, x: jax.Array, active: jax.Array,
@@ -200,6 +272,43 @@ class BatchedSpartusEngine(PackedSpartusModel):
             reset = jnp.zeros(active.shape, bool)
         return self._step_frames(state, frames, jnp.asarray(active, bool),
                                  jnp.asarray(reset, bool))
+
+    def step_chunk(
+        self, state: PoolState, frames: jax.Array, lengths: jax.Array,
+        active: jax.Array, reset: jax.Array, out_buf: jax.Array,
+        *, n_frames: int,
+    ) -> Tuple[PoolState, jax.Array]:
+        """Advance every active slot up to ``n_frames`` frames in ONE
+        dispatch (`jax.lax.scan` over the per-frame core).
+
+        frames  [B, T_buf, D]          device-resident feature buffers
+        lengths [B] int32              per-slot utterance length; a slot
+                                       stops (state frozen, no logits, no
+                                       telemetry) once its cursor reaches it
+        active  [B] bool               occupied slots
+        reset   [B] bool               slots admitted at this chunk boundary
+                                       (layer state + cursor re-initialised
+                                       before the first frame)
+        out_buf [B, T_pad, n_classes]  device logits buffer; frame t of slot
+                                       b lands in ``out_buf[b, t]``.  T_pad
+                                       must be >= T_buf + n_frames: the
+                                       chunk banks its stacked logits with
+                                       one dynamic slice per slot, and rows
+                                       past a session's length are scratch
+                                       (never read — retirement fetches
+                                       ``[:n_frames]``)
+
+        Returns ``(new_state, new_out_buf)``.  Both the incoming ``state``
+        and ``out_buf`` are DONATED: the caller must drop its references
+        and use the returned arrays (slice a retiring slot's rows *before*
+        the next call).  Logits never leave the device here — fetch a
+        finished slot's rows from the output buffer once, at retirement.
+        Numerics per consumed frame are identical to ``step_frames``.
+        """
+        return self._step_chunk(
+            state, frames, jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(active, bool), jnp.asarray(reset, bool), out_buf,
+            n_frames=int(n_frames))
 
     # -- telemetry -----------------------------------------------------------
 

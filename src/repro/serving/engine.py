@@ -40,7 +40,10 @@ class PackedLayer:
     hidden_dim: int
     capacity: int              # NZI list capacity
     pack_overflow: int = 0     # nonzeros clipped enforcing BLEN at pack time
-    w_dense: Optional[jax.Array] = None  # [4H, D+H] mirror (dense-gather path)
+    # [D+H, 4H] PRE-TRANSPOSED dense mirror (dense SpMV path): stored in
+    # GEMM-contraction layout because XLA CPU re-transposes `w.T` on every
+    # tick otherwise (~3x the dot cost at hidden=128)
+    w_dense_t: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass
@@ -86,16 +89,17 @@ def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
         cfg.spmv_path == "auto" and ops.spmv_use_dense_gather(s, cfg.gamma)
     ):
         # pack-time dense mirror: decoded from the (clipped) CBCSC arrays so
-        # every SpMV path computes from identical weights.
-        w_dense = cbcsc_decode(enc, jnp.float32)
+        # every SpMV path computes from identical weights; materialised
+        # transposed, in the per-tick GEMM's contraction layout.
+        w_dense_t = jnp.asarray(cbcsc_decode(enc, jnp.float32).T)
     else:
-        w_dense = None
+        w_dense_t = None
     capacity = max(int(n_cols * cfg.capacity_frac), 8)
     return PackedLayer(
         enc=enc, scale=scale, bias=params["b"],
         input_dim=w.shape[1] - params["w_h"].shape[1],
         hidden_dim=params["w_h"].shape[1], capacity=capacity,
-        pack_overflow=overflow, w_dense=w_dense,
+        pack_overflow=overflow, w_dense_t=w_dense_t,
     )
 
 
@@ -118,13 +122,14 @@ def _step_layer(
     delta, s_hat, nnz = ops.delta_encode(
         s, state.s_hat, cfg.theta, use_pallas=cfg.use_pallas
     )
-    idx, vals, dropped = ops.select_active_columns(delta, layer.capacity)
-    if layer.w_dense is not None:
+    if layer.w_dense_t is not None:
         # B=1 leg of the exact batched dense-mirror computation, so pooled
         # and batch-1 logits stay bit-comparable on the dense path:
-        y = ops.delta_spmv_dense_gather_batch(
-            layer.w_dense, idx[None], vals[None])[0]
+        y, dropped = ops.delta_spmv_dense_topk_batch(
+            layer.w_dense_t, delta[None], layer.capacity)
+        y, dropped = y[0], dropped[0]
     else:
+        idx, vals, dropped = ops.select_active_columns(delta, layer.capacity)
         y = ops.stsp_spmv(
             layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
             use_pallas=cfg.use_pallas,

@@ -23,25 +23,70 @@ Lifecycle of a request:
   host -> device — then the `[B, n_classes]` logits are fetched once,
   each active slot's row appended to its request, and slots whose
   utterance is exhausted retire.
+* `step_chunk` (``chunk_frames >= 1``) amortises that dispatch over up to
+  C frames: ONE `lax.scan`-backed dispatch advances every slot by up to C
+  frames, banking logits in a per-slot device output buffer, and the pool
+  runs **double-buffered**: while chunk t executes on device, the host
+  does chunk t's retirement bookkeeping and the next admissions, and the
+  device->host logits fetch of chunk t-1's retired sessions.  A finished
+  session's logits leave the device once, at retirement, instead of one
+  `[B, n_classes]` row fetch per tick.  Admission happens at chunk
+  boundaries only.
 * Idle slots ride along masked-out for free; the pool never reshapes (the
   frame buffer length is bucketed to powers of two), so the step function
   compiles once per (capacity, bucket).
 
 `serve_requests` is the batteries-included driver: feed it an iterable of
 requests with arrival times (in scheduler ticks), get per-request logits
-plus queue/service/latency metrics back.
+plus queue/service/latency metrics back; ``chunk_frames=C`` selects the
+chunked path (0 keeps the per-frame oracle path).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _device_upload(
+    frames: jax.Array, lengths: jax.Array, rows: jax.Array,
+    slots: jax.Array, ts: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one admission wave's (bucket-padded) utterances + lengths
+    into the pool's device buffers at DYNAMIC slot indices.
+
+    rows [R, T_buf, D], slots/ts [R] int32; padding entries carry an
+    out-of-bounds slot and are dropped.  Jitted with traced indices so it
+    compiles once per (buffer shape, R-bucket): an eagerly dispatched
+    ``frames.at[slot, :t].set(...)`` re-lowers per (slot, t) pair and
+    cost ~2 ms PER ADMISSION on the CPU backend — an admission storm of
+    16 requests used to spend longer staging frames than the device
+    spends computing a 32-frame chunk.  The buffers are donated, so the
+    scatter updates them in place instead of copying the whole slab (the
+    runtime serializes the write against any in-flight chunk still
+    reading the old frames)."""
+    frames = frames.at[slots].set(rows, mode="drop")
+    lengths = lengths.at[slots].set(ts, mode="drop")
+    return frames, lengths
+
+
+@jax.jit
+def _snapshot(out_buf: jax.Array) -> jax.Array:
+    """Copy the chunk's logits buffer in ONE device op (shape-stable: a
+    single compile per pool, however many sessions retire), detaching the
+    retirees' rows before the next chunk donates the buffer away.  The
+    retired sessions' rows are then fetched in one D2H copy and sliced
+    host-side — an eager slice + fetch per session cost ~0.5 ms each."""
+    return out_buf.copy()
 
 
 @dataclasses.dataclass
@@ -92,6 +137,20 @@ class _Session:
 
 
 @dataclasses.dataclass
+class _PendingChunk:
+    """Sessions that finished inside an in-flight chunk: their logits rows
+    were gathered out of the device output buffer in one op (async,
+    BEFORE the next chunk donates that buffer away) and are fetched to
+    host one chunk later — one D2H copy for all of them — overlapped with
+    the next chunk's device execution."""
+
+    sessions: List[_Session]
+    slots: List[int]       # pool slot each session occupied
+    finish_steps: List[int]
+    rows: jax.Array        # [B, T_pad, n_classes] device-side snapshot
+
+
+@dataclasses.dataclass
 class ServeStats:
     capacity: int
     n_requests: int
@@ -109,6 +168,18 @@ class ServeStats:
     # True when max_steps stopped the run before every request completed;
     # in-flight sessions were drained into truncated RequestResults:
     truncated: bool = False
+    # dispatch amortisation: jitted device dispatches issued and their
+    # ratio to frames served — the per-frame path pays ~1/B dispatches per
+    # frame, the chunked path ~1/(B*C):
+    chunk_frames: int = 0            # 0 = per-frame path
+    n_dispatches: int = 0
+    dispatches_per_frame: float = 0.0
+    # mean fraction of each step_chunk call's wall time the host spent on
+    # useful work after the dispatch returned (retirement bookkeeping, the
+    # device-side snapshot, the previous chunk's logits fetch) — all
+    # concurrent with the in-flight device chunk; 0.0 on the per-frame
+    # path, which syncs on its logits every tick:
+    host_overlap_frac: float = 0.0
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -133,20 +204,50 @@ class SessionPool:
     ``PoolState`` — the steady state issues zero per-tick host staging
     copies (the old `step_batch` path re-staged every slot's frame on host
     each tick, which at large hidden sizes cost more than the math).
+
+    With ``chunk_frames=C >= 1`` the pool runs the chunked tick loop:
+    ``step_chunk`` advances every active slot up to C frames in ONE
+    dispatch and banks logits in a per-slot device output buffer
+    `[B, T_buf, n_classes]`; retired sessions' logits are fetched once, at
+    retirement, double-buffered one chunk behind the in-flight dispatch.
+    A chunked pool steps with ``step_chunk``/``flush`` only (``step``
+    raises: the two modes account logits differently).
     """
 
     def __init__(self, engine: BatchedSpartusEngine, capacity: int,
-                 max_frames: int = 64):
+                 max_frames: int = 64, chunk_frames: int = 0):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if chunk_frames < 0:
+            raise ValueError("chunk_frames must be >= 0 (0 = per-frame)")
         self.engine = engine
         self.capacity = capacity
+        self.chunk_frames = chunk_frames
         self.state: PoolState = engine.init_state(capacity)
         self._slots: List[Optional[_Session]] = [None] * capacity
         # device-resident per-slot feature buffers, uploaded at admission:
         self._t_buf = _frame_bucket(max_frames)
         self._frames = jnp.zeros((capacity, self._t_buf, engine.input_dim),
                                  jnp.float32)
+        # per-slot utterance lengths (device) — the chunk masks a slot off
+        # once its cursor reaches its length:
+        self._lengths = jnp.zeros((capacity,), jnp.int32)
+        # chunked mode: device logits buffer + retirements pending their
+        # (overlapped) host fetch.  The time axis is padded by
+        # chunk_frames so the chunk's banking slice never clamps: rows
+        # past a session's length are scratch no reader consumes.
+        self._out: Optional[jax.Array] = (
+            engine.init_out_buf(capacity, self._t_buf + chunk_frames)
+            if chunk_frames else None)
+        self._pending: Optional[_PendingChunk] = None
+        # admissions staged host-side, flushed to device in ONE batched
+        # upload at the next step/chunk boundary:
+        self._staged: List[Tuple[int, np.ndarray]] = []
+        # observability: buffer growths (should be 0 when pre-sized),
+        # dispatches issued, and per-chunk host-overlap fractions:
+        self.n_frame_grows = 0
+        self.n_dispatches = 0
+        self._overlap_fracs: List[float] = []
 
     @property
     def n_active(self) -> int:
@@ -155,6 +256,12 @@ class SessionPool:
     @property
     def n_free(self) -> int:
         return self.capacity - self.n_active
+
+    @property
+    def has_pending(self) -> bool:
+        """Chunked mode: retired sessions whose logits fetch is still
+        outstanding (resolved by the next ``step_chunk`` or ``flush``)."""
+        return self._pending is not None
 
     def admit(self, request: StreamRequest, now: int,
               arrival_wall: Optional[float] = None) -> bool:
@@ -172,26 +279,55 @@ class SessionPool:
                     request=request, admit_step=now,
                     arrival_wall=(time.perf_counter() if arrival_wall is None
                                   else arrival_wall))
-                self._upload(k, request.feats)
+                # host-side staging only; the device upload happens once
+                # per admission wave, at the next step/chunk boundary
+                self._staged.append(
+                    (k, np.asarray(request.feats, np.float32)))
                 return True
         return False
 
-    def _upload(self, slot: int, feats: np.ndarray) -> None:
-        """One-time H2D copy of a whole utterance into the slot's buffer
-        (grows the bucket — and recompiles the step — only when an
-        utterance exceeds every previous one)."""
-        t = feats.shape[0]
-        if t > self._t_buf:
-            new_t = _frame_bucket(t, floor=self._t_buf)
-            self._frames = jnp.pad(
-                self._frames, ((0, 0), (0, new_t - self._t_buf), (0, 0)))
-            self._t_buf = new_t
-        self._frames = self._frames.at[slot, :t].set(
-            jnp.asarray(feats, jnp.float32))
+    def _flush_uploads(self) -> None:
+        """One batched H2D copy of every utterance admitted since the last
+        step (the whole admission wave: [R, T_buf, D] in one ``device_put``
+        + one jitted scatter, with R bucketed to a power of two so at most
+        log2(capacity) variants ever compile).
 
-    def step(self, now: int) -> List[RequestResult]:
-        """Advance every active session one frame (one jitted call).
-        Returns the requests that finished on this tick."""
+        The only host->device bytes are the new utterances themselves:
+        when a long utterance outgrows the bucket, the frame slab is
+        reallocated ONCE, straight to the new utterance's bucket, and the
+        resident slots' frames are copied device->device — never re-staged
+        from host (regression-tested in tests/test_chunked_serving.py).
+        Growth recompiles the step for the new bucket, so drivers pre-size
+        ``max_frames`` to the longest known utterance."""
+        if not self._staged:
+            return
+        t_max = max(f.shape[0] for _, f in self._staged)
+        if t_max > self._t_buf:
+            old_t, new_t = self._t_buf, _frame_bucket(t_max,
+                                                      floor=self._t_buf)
+            grown = jnp.zeros((self.capacity, new_t, self.engine.input_dim),
+                              jnp.float32)
+            self._frames = grown.at[:, :old_t, :].set(self._frames)
+            if self._out is not None:
+                out = jnp.zeros((self.capacity, new_t + self.chunk_frames,
+                                 self.engine.n_classes), jnp.float32)
+                self._out = out.at[
+                    :, :old_t + self.chunk_frames, :].set(self._out)
+            self._t_buf = new_t
+            self.n_frame_grows += 1
+        rb = _frame_bucket(len(self._staged), floor=1)
+        rows = np.zeros((rb, self._t_buf, self.engine.input_dim), np.float32)
+        slots = np.full((rb,), self.capacity, np.int32)  # OOB pad: dropped
+        ts = np.zeros((rb,), np.int32)
+        for i, (k, feats) in enumerate(self._staged):
+            rows[i, :feats.shape[0]] = feats  # zero tail clears stale rows
+            slots[i] = k
+            ts[i] = feats.shape[0]
+        self._staged.clear()
+        self._frames, self._lengths = _device_upload(
+            self._frames, self._lengths, jax.device_put(rows), slots, ts)
+
+    def _masks(self) -> Tuple[np.ndarray, np.ndarray]:
         active = np.zeros((self.capacity,), bool)
         reset = np.zeros((self.capacity,), bool)
         for k, sess in enumerate(self._slots):
@@ -199,11 +335,23 @@ class SessionPool:
                 continue
             active[k] = True
             reset[k] = sess.needs_reset
+        return active, reset
+
+    def step(self, now: int) -> List[RequestResult]:
+        """Advance every active session one frame (one jitted call).
+        Returns the requests that finished on this tick."""
+        if self.chunk_frames:
+            raise RuntimeError(
+                "this pool was built with chunk_frames >= 1; "
+                "drive it with step_chunk()/flush(), not step()")
+        active, reset = self._masks()
         if not active.any():
             return []
+        self._flush_uploads()
 
         self.state, logits = self.engine.step_frames(
             self.state, self._frames, active, reset)
+        self.n_dispatches += 1
         logits_np = np.asarray(logits)          # ONE device->host fetch/tick
 
         finished: List[RequestResult] = []
@@ -225,23 +373,141 @@ class SessionPool:
                 self._slots[k] = None
         return finished
 
+    # -- chunked tick loop ---------------------------------------------------
+
+    def max_chunk_advance(self) -> int:
+        """Ticks the next ``step_chunk`` will consume: min(chunk_frames,
+        longest remaining utterance).  0 when no session is active."""
+        rem = [s.request.n_frames - s.cursor
+               for s in self._slots if s is not None]
+        return min(self.chunk_frames, max(rem)) if rem else 0
+
+    def _chunk_len(self) -> int:
+        """Scan length for the next chunk dispatch: the pow2 bucket of the
+        actual advance, capped at chunk_frames.  Tail chunks therefore run
+        a shorter scan instead of C mostly-masked iterations, and the jit
+        compiles at most log2(C) variants."""
+        adv = self.max_chunk_advance()
+        return min(self.chunk_frames, _frame_bucket(adv, floor=1))
+
+    def step_chunk(self, now: int) -> List[RequestResult]:
+        """Advance every active session up to ``chunk_frames`` frames in
+        ONE device dispatch, double-buffered.
+
+        Returns the results of sessions that retired in the PREVIOUS
+        chunk: their device->host logits fetch happens here, overlapped
+        with the chunk just dispatched (JAX async dispatch returns before
+        the device finishes).  Sessions finishing in THIS chunk have their
+        output-buffer rows sliced off device-side now — before the next
+        dispatch donates the buffer away — and surface on the next
+        ``step_chunk``/``flush`` call.  Call ``flush()`` after the last
+        chunk to collect the tail."""
+        if not self.chunk_frames:
+            raise RuntimeError(
+                "this pool was built with chunk_frames=0; use step()")
+        active, reset = self._masks()
+        if not active.any():
+            return self.flush()
+        n = self._chunk_len()
+        self._flush_uploads()
+
+        t0 = time.perf_counter()
+        self.state, self._out = self.engine.step_chunk(
+            self.state, self._frames, self._lengths, active, reset,
+            self._out, n_frames=n)
+        self.n_dispatches += 1
+        t_dispatched = time.perf_counter()
+
+        # ---- everything below overlaps the in-flight device chunk ----
+        retiring: List[_Session] = []
+        slots: List[int] = []
+        finish_steps: List[int] = []
+        for k, sess in enumerate(self._slots):
+            if sess is None:
+                continue
+            sess.needs_reset = False
+            adv = min(self.chunk_frames, sess.request.n_frames - sess.cursor)
+            sess.cursor += adv
+            if sess.cursor >= sess.request.n_frames:
+                retiring.append(sess)
+                slots.append(k)
+                finish_steps.append(now + adv - 1)
+                self._slots[k] = None
+        newly = None
+        if retiring:
+            # snapshot the output buffer NOW, in one device op: it is
+            # dispatched against this chunk's output before the next
+            # step_chunk donates it, detaching the rows device-side; the
+            # one-copy host fetch waits one more chunk.
+            newly = _PendingChunk(sessions=retiring, slots=slots,
+                                  finish_steps=finish_steps,
+                                  rows=_snapshot(self._out))
+        finished = self._resolve_pending()   # syncs on the PREVIOUS chunk
+        t_end = time.perf_counter()
+        self._pending = newly
+
+        wall = t_end - t0
+        if wall > 0:
+            # fraction of this call's wall time spent doing useful host
+            # work AFTER the dispatch returned — retirement bookkeeping,
+            # the snapshot dispatch, and the previous chunk's logits
+            # fetch — all concurrent with the device executing this chunk.
+            self._overlap_fracs.append((t_end - t_dispatched) / wall)
+        return finished
+
+    def flush(self) -> List[RequestResult]:
+        """Resolve retirements still pending from the last dispatched
+        chunk (the double-buffer tail)."""
+        return self._resolve_pending()
+
+    def _resolve_pending(self) -> List[RequestResult]:
+        if self._pending is None:
+            return []
+        p, self._pending = self._pending, None
+        rows = np.asarray(p.rows)              # ONE fetch for all retirees
+        out: List[RequestResult] = []
+        for sess, k, fin in zip(p.sessions, p.slots, p.finish_steps):
+            out.append(RequestResult(
+                req_id=sess.request.req_id,
+                arrival_step=sess.request.arrival_step,
+                admit_step=sess.admit_step,
+                finish_step=fin,
+                logits=rows[k, :sess.request.n_frames].copy(),
+                wall_latency_s=time.perf_counter() - sess.arrival_wall,
+            ))
+        return out
+
+    def mean_host_overlap_frac(self) -> float:
+        return float(np.mean(self._overlap_fracs)) if self._overlap_fracs \
+            else 0.0
+
     def drain(self, now: int) -> List[RequestResult]:
         """Evict every in-flight session, returning truncated
         ``RequestResult``s with the logits produced so far (used when
         ``serve_requests`` hits ``max_steps`` mid-stream, so partial work is
-        surfaced instead of silently dropped)."""
+        surfaced instead of silently dropped).  In chunked mode the
+        already-finished (pending-fetch) sessions are resolved first, then
+        partial sessions' rows are read from the device output buffer —
+        truncation granularity is the chunk."""
         n_classes = self.engine.n_classes
-        out: List[RequestResult] = []
+        self._staged.clear()    # evicted sessions' uploads must not land
+        out: List[RequestResult] = self._resolve_pending()
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
+            if self.chunk_frames:
+                logits = (np.asarray(self._out[k, :sess.cursor])
+                          if sess.cursor
+                          else np.zeros((0, n_classes), np.float32))
+            else:
+                logits = (np.stack(sess.rows) if sess.rows
+                          else np.zeros((0, n_classes), np.float32))
             out.append(RequestResult(
                 req_id=sess.request.req_id,
                 arrival_step=sess.request.arrival_step,
                 admit_step=sess.admit_step,
                 finish_step=now,
-                logits=(np.stack(sess.rows) if sess.rows
-                        else np.zeros((0, n_classes), np.float32)),
+                logits=logits,
                 wall_latency_s=time.perf_counter() - sess.arrival_wall,
                 truncated=True,
             ))
@@ -272,6 +538,7 @@ def serve_requests(
     requests: Iterable[RequestLike],
     capacity: int,
     max_steps: Optional[int] = None,
+    chunk_frames: int = 0,
 ) -> Tuple[List[RequestResult], ServeStats]:
     """Drive a request stream through a `SessionPool` to completion.
 
@@ -280,10 +547,20 @@ def serve_requests(
     waits (backpressure) and is admitted as soon as a slot frees.  Returns
     per-request results (logits + latency) and aggregate throughput stats.
 
+    ``chunk_frames=C >= 1`` selects the chunked tick loop: one device
+    dispatch advances all active sessions up to C frames, logits are
+    banked on device and fetched once per session at retirement
+    (double-buffered behind the next chunk), and admission happens at
+    chunk boundaries — higher throughput (fewer dispatches/frame), up to
+    C-1 ticks of extra queueing latency.  ``chunk_frames=0`` (default)
+    keeps the per-frame path, which is the chunked path's parity oracle.
+
     If ``max_steps`` stops the run early, in-flight sessions are drained
     into ``RequestResult``s with ``truncated=True`` holding their partial
     logits (never-admitted requests have no partial logits and are simply
-    absent from the results); ``stats.truncated`` flags the cut.
+    absent from the results); ``stats.truncated`` flags the cut — in
+    chunked mode the cut lands on the first chunk boundary at or past
+    ``max_steps``, so partial logits come in chunk granularity.
     ``total_steps`` counts only ticks that advanced at least one slot, so
     frames/step utilisation is not diluted by idle fast-forward ticks.
     """
@@ -292,7 +569,8 @@ def serve_requests(
     # pre-size the device frame buffers to the longest utterance so no
     # mid-run bucket growth (= recompile) can happen:
     max_frames = max((r.n_frames for r in pending), default=1)
-    pool = SessionPool(engine, capacity, max_frames=max_frames)
+    pool = SessionPool(engine, capacity, max_frames=max_frames,
+                       chunk_frames=chunk_frames)
     waiting: deque[Tuple[StreamRequest, float]] = deque()
     results: List[RequestResult] = []
     now = 0
@@ -300,7 +578,7 @@ def serve_requests(
     truncated = False
     t0 = time.perf_counter()
 
-    while pending or waiting or pool.n_active:
+    while pending or waiting or pool.n_active or pool.has_pending:
         # fast-forward over idle time to the next arrival:
         if not waiting and not pool.n_active and pending:
             now = max(now, pending[0].arrival_step)
@@ -313,11 +591,17 @@ def serve_requests(
         # above makes idle iterations rare, but total_steps feeds per-step
         # utilisation metrics and must stay exact if the loop ever changes
         # (e.g. wall-clock-paced ticking instead of fast-forward).
-        dispatched = pool.n_active > 0
-        results.extend(pool.step(now))
-        if dispatched:
-            total_steps += 1
-        now += 1
+        if chunk_frames:
+            adv = pool.max_chunk_advance()
+            results.extend(pool.step_chunk(now) if adv else pool.flush())
+            total_steps += adv
+            now += max(adv, 1)
+        else:
+            dispatched = pool.n_active > 0
+            results.extend(pool.step(now))
+            if dispatched:
+                total_steps += 1
+            now += 1
         if max_steps is not None and total_steps >= max_steps:
             truncated = bool(pending or waiting or pool.n_active)
             results.extend(pool.drain(now - 1))
@@ -341,5 +625,9 @@ def serve_requests(
         p95_turnaround_steps=float(np.percentile(tas, 95)) if len(tas) else 0.0,
         sparsity=pool.measured_sparsity(),
         truncated=truncated,
+        chunk_frames=chunk_frames,
+        n_dispatches=pool.n_dispatches,
+        dispatches_per_frame=pool.n_dispatches / frames if frames else 0.0,
+        host_overlap_frac=pool.mean_host_overlap_frac(),
     )
     return results, stats

@@ -4,7 +4,11 @@ The batch-1 `SpartusEngine` appends a Python dict per (step, layer) with
 `int()` host syncs on every frame — fine for one utterance, fatal for a
 server.  Here telemetry is three `[L]` integer accumulators that live on
 device and are folded into `BatchedSpartusEngine.step_batch` itself, so
-the steady state does zero host round-trips.  `measured_sparsity` fetches
+the steady state does zero host round-trips.  The accumulators ride the
+chunked tick loop for free: they are part of the `lax.scan` carry in
+`step_chunk`, so one chunk dispatch folds in L x C (layer, frame)
+samples — only frames a slot actually consumed count, since `accumulate`
+masks by the per-iteration active mask.  `measured_sparsity` fetches
 the accumulators once, on demand, and reduces them to the same summary
 statistics the batch-1 engine reports:
 
@@ -40,8 +44,13 @@ class TelemetryState(NamedTuple):
 
 
 def init_telemetry(n_layers: int) -> TelemetryState:
-    z = jnp.zeros((n_layers,), jnp.float32)
-    return TelemetryState(nnz_sum=z, overflow_steps=z, steps=z)
+    # three DISTINCT buffers: the serving step/chunk functions donate the
+    # whole PoolState, and donating one buffer aliased into three leaves
+    # fails with "attempt to donate the same buffer twice"
+    def z() -> jax.Array:
+        return jnp.zeros((n_layers,), jnp.float32)
+
+    return TelemetryState(nnz_sum=z(), overflow_steps=z(), steps=z())
 
 
 def accumulate(
@@ -59,6 +68,28 @@ def accumulate(
         overflow_steps=tel.overflow_steps.at[layer].add(
             jnp.sum((dropped > 0).astype(jnp.int32) * act).astype(f32)),
         steps=tel.steps.at[layer].add(jnp.sum(act).astype(f32)),
+    )
+
+
+def accumulate_layers(
+    tel: TelemetryState,
+    nnz: jax.Array,      # [L, B] int32 fired-delta counts, all layers
+    dropped: jax.Array,  # [L, B] int32 overflow drop counts
+    active: jax.Array,   # [B] bool slot mask
+) -> TelemetryState:
+    """Fold one whole step (all layers at once) into the accumulators.
+
+    Same math as L calls to ``accumulate``, but as three [L]-vector adds
+    instead of 3L one-element scatters — the scatters were measurable
+    per-tick overhead on the CPU backend, and inside the chunked
+    ``lax.scan`` this runs once per frame."""
+    act = active.astype(jnp.int32)
+    f32 = jnp.float32
+    return TelemetryState(
+        nnz_sum=tel.nnz_sum + jnp.sum(nnz * act, axis=-1).astype(f32),
+        overflow_steps=tel.overflow_steps + jnp.sum(
+            (dropped > 0).astype(jnp.int32) * act, axis=-1).astype(f32),
+        steps=tel.steps + jnp.sum(act).astype(f32),
     )
 
 

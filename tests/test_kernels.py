@@ -329,6 +329,47 @@ def test_select_active_columns_overflow_keeps_largest():
     assert int(dropped) == 2       # 0.1 and 0.3 dropped
 
 
+def test_dense_topk_fused_matches_select_plus_gather():
+    """The fused dense-mirror SpMV (capacity clip in the dense domain,
+    lax.cond-guarded) must reproduce select_active_columns_batch +
+    delta_spmv_dense_gather_batch BIT-exactly — including boundary ties
+    (broken toward the lower index), rows that overflow capacity, rows
+    that don't, and all-zero rows."""
+    b, q, h, k = 6, 48, 32, 12
+    w = jnp.asarray(
+        np.asarray(jax.random.normal(jax.random.key(0), (h, q))))
+    rng = np.random.default_rng(1)
+    cases = []
+    dense = rng.standard_normal((b, q)).astype(np.float32)       # overflow
+    cases.append(dense)
+    sparse = dense * (rng.random((b, q)) < 0.1)                  # underflow
+    cases.append(sparse.astype(np.float32))
+    tied = np.zeros((b, q), np.float32)                          # boundary tie
+    tied[:, : k + 4] = 0.5
+    tied[:, 1] = -0.5                                            # sign-tie too
+    cases.append(tied)
+    cases.append(np.zeros((b, q), np.float32))                   # nothing fired
+    mixed = np.zeros((b, q), np.float32)                         # per-row mix
+    mixed[0] = dense[0]
+    mixed[2, :3] = 1.0
+    cases.append(mixed)
+    for delta in cases:
+        delta = jnp.asarray(delta)
+        idx, vals, dropped_ref = ops.select_active_columns_batch(delta, k)
+        y_ref = ops.delta_spmv_dense_gather_batch(w, idx, vals)
+        y, dropped = ops.delta_spmv_dense_topk_batch(
+            jnp.asarray(w.T), delta, k)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+        np.testing.assert_array_equal(np.asarray(dropped),
+                                      np.asarray(dropped_ref))
+    # capacity >= Q short-circuit: nothing can drop, delta flows through
+    y, dropped = ops.delta_spmv_dense_topk_batch(
+        jnp.asarray(w.T), jnp.asarray(cases[0]), q)
+    np.testing.assert_array_equal(np.asarray(dropped), 0)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(cases[0]) @ np.asarray(w).T, atol=1e-5)
+
+
 def test_full_delta_step_via_kernels_matches_dense():
     """End-to-end single DeltaLinear step through the kernel trio equals the
     dense masked computation: encode -> select -> stsp_spmv."""

@@ -268,7 +268,7 @@ def test_spmv_path_selection_parity(model):
                             capacity_frac=1.0, spmv_path=path)
         e1 = SpartusEngine(params, cfg, ecfg)
         eb = BatchedSpartusEngine(params, cfg, ecfg)
-        assert (e1.layers[0].w_dense is not None) == (path == "dense")
+        assert (e1.layers[0].w_dense_t is not None) == (path == "dense")
         feats = _utterance(90, 6)
         ref = np.asarray(e1.run_utterance(jnp.asarray(feats)))
         results, _ = serve_requests(eb, [StreamRequest(0, 0, feats)],
