@@ -8,6 +8,11 @@ identical (atol 1e-5) to the batch-1 engine's.
 
     PYTHONPATH=src python benchmarks/serving_bench.py
     PYTHONPATH=src python benchmarks/serving_bench.py --chunk-frames 32
+    PYTHONPATH=src python benchmarks/serving_bench.py --async-load  # open-loop
+        Poisson-arrival load generator against the asyncio front-end:
+        latency (p50/p95/p99), time-to-first-logit and queue wait vs
+        offered load, plus sustained throughput vs the synchronous
+        chunked pool at the same chunk size
     PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate:
         fail unless capacity-16 aggregate frames/s >= 4x sequential
     PYTHONPATH=src python benchmarks/serving_bench.py --sweep   # slow CI gate:
@@ -17,7 +22,9 @@ identical (atol 1e-5) to the batch-1 engine's.
         scatter/dense-gather SpMV paths); also runs the chunked tick loop
         at chunk_frames in {1, 8, 32} vs the per-frame pool at hidden=128
         and fails if chunk_frames=32 is slower than per-frame (the
-        dispatch-amortisation gate)
+        dispatch-amortisation gate), and the async open-loop leg, failing
+        if the async front-end's sustained (saturated) throughput drops
+        below ASYNC_FLOOR x the synchronous chunked pool
 
 Runs on CPU: the batch-1 engine pays ~8 XLA dispatches + 3 host syncs per
 (frame, layer) while the pool amortises one dispatch + one logits fetch
@@ -30,6 +37,7 @@ dispatch / fetch overhead is amortised C-fold on top.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import sys
 import time
@@ -41,8 +49,8 @@ import numpy as np
 
 from repro.models import lstm_am
 from repro.serving import (
-    BatchedSpartusEngine, EngineConfig, SpartusEngine, StreamRequest,
-    serve_requests,
+    AsyncSpartusServer, BatchedSpartusEngine, EngineConfig, SpartusEngine,
+    StreamRequest, serve_requests,
 )
 
 
@@ -171,6 +179,136 @@ def bench_chunked(hidden: int, layers: int, input_dim: int, classes: int,
     return report, parity_ok
 
 
+def bench_async_load(hidden: int, layers: int, input_dim: int, classes: int,
+                     frames: int, n_requests: int, cap: int, theta: float,
+                     gamma: float, m: int, capacity_frac: float, chunk: int,
+                     loads=(0.5, 1.0, 2.0)):
+    """Open-loop Poisson-arrival load generator against the asyncio
+    front-end (`AsyncSpartusServer`), at offered loads relative to the
+    synchronous chunked pool's saturated throughput.
+
+    Open-loop means arrivals are scheduled by the wall clock, independent
+    of completions (the admission queue is unbounded), so past saturation
+    the latency percentiles grow while sustained throughput plateaus at
+    the server's capacity — the classic latency-vs-offered-load curve.
+    Each load row records achieved frames/s, p50/p95/p99 latency,
+    time-to-first-logit and queue wait.
+
+    The ``saturated`` row is the curve's limit point — every arrival at
+    t=0 — which is exactly the workload the synchronous chunked drain
+    loop (`serve_requests`) measures, so the report's
+    ``throughput_ratio`` = saturated async frames/s / sync chunked
+    frames/s isolates the front-end's event-loop overhead (~0.9x on a
+    2-core CPU box; the finite-load rows are additionally depressed by
+    chunk under-fill while staggered sessions wait for boundaries, which
+    is a property of chunked scheduling itself, not of the async front
+    end).  Per-request logits are parity-checked against the synchronous
+    results at every load.  Returns (report dict, parity_ok)."""
+    params, cfg = build_model(hidden, layers, input_dim, classes, gamma, m)
+    ecfg = EngineConfig(theta=theta, gamma=gamma, m=m,
+                        capacity_frac=capacity_frac)
+    eb = BatchedSpartusEngine(params, cfg, ecfg)
+    reqs = make_requests(n_requests, frames, input_dim)
+    total_frames = n_requests * frames
+
+    # -- synchronous chunked baseline (same chunk size) ----------------------
+    serve_requests(eb, [StreamRequest(i, 0, reqs[0].feats)
+                        for i in range(cap)], cap, chunk_frames=chunk)  # warm
+    base_results, base = serve_requests(eb, reqs, capacity=cap,
+                                        chunk_frames=chunk)
+    sync_fps = base.frames_per_s
+    print(f"[bench] hidden={hidden} capacity={cap} chunk={chunk} sync "
+          f"chunked pool: {sync_fps:8.0f} frames/s")
+
+    async def run_async(arrivals):
+        async with AsyncSpartusServer(
+                eb, cap, chunk_frames=chunk, max_frames=frames,
+                offload_ticks=False) as srv:
+            t0 = time.perf_counter()
+
+            async def client(i):
+                await asyncio.sleep(arrivals[i])
+                return await srv.submit(reqs[i].feats)
+
+            results = await asyncio.gather(
+                *[client(i) for i in range(n_requests)])
+            wall = time.perf_counter() - t0
+        return results, wall
+
+    # warm the async-only shapes outside the timed runs.  One all-at-once
+    # pass is NOT enough: staggered arrivals hit small pow2 admission-wave
+    # upload buckets that an aligned pass never compiles (a stray ~100 ms
+    # compile mid-leg wrecks a 100 ms measurement), so every bucket is
+    # compiled deterministically here, and each load leg below also runs
+    # once unmeasured with the SAME arrival schedule before its timed pass.
+    from repro.serving import SessionPool
+    wpool = SessionPool(eb, cap, max_frames=frames, chunk_frames=chunk)
+    rid = 0
+    r = 1
+    while r <= cap:
+        for _ in range(r):
+            wpool.admit(StreamRequest(10 ** 6 + rid, 0, reqs[0].feats), 0)
+            rid += 1
+        wpool.step_chunk(now=0)
+        wpool.drain(now=0)
+        r *= 2
+    asyncio.run(run_async([0.0] * n_requests))
+
+    report = {"hidden": hidden, "m": m, "capacity": cap,
+              "chunk_frames": chunk, "n_requests": n_requests,
+              "frames_per_request": frames,
+              "sync_chunked": base.to_dict()}
+    parity_ok = True
+
+    def one_leg(label, mult, arrivals):
+        nonlocal parity_ok
+        asyncio.run(run_async(arrivals))            # compile-warm pass
+        results, wall = asyncio.run(run_async(arrivals))
+        for rr in results:
+            if not np.allclose(rr.logits, base_results[rr.req_id].logits,
+                               atol=1e-5):
+                parity_ok = False
+                print(f"[bench] ASYNC PARITY FAIL req {rr.req_id} at "
+                      f"load {label}")
+        achieved = total_frames / wall
+        lat = np.array([rr.wall_latency_s for rr in results])
+        ttfl = np.array([rr.ttfl_s for rr in results])
+        qw = np.array([rr.queue_wait_s for rr in results])
+        row = {
+            "offered_x": mult,
+            "offered_frames_per_s": (mult * sync_fps
+                                     if np.isfinite(mult) else None),
+            "achieved_frames_per_s": achieved,
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "p50_ttfl_s": float(np.percentile(ttfl, 50)),
+            "p95_queue_wait_s": float(np.percentile(qw, 95)),
+        }
+        print(f"[bench] async load {label:>5}: {achieved:8.0f} frames/s  "
+              f"p50 {row['p50_latency_s']*1e3:7.1f} ms  "
+              f"p99 {row['p99_latency_s']*1e3:7.1f} ms  "
+              f"queue p95 {row['p95_queue_wait_s']*1e3:7.1f} ms")
+        return row
+
+    rng = np.random.default_rng(0)
+    for mult in loads:
+        # Poisson process: exponential inter-arrival gaps at a mean rate
+        # of offered_fps / frames utterances per second.
+        gaps = rng.exponential(frames / (mult * sync_fps), n_requests)
+        arrivals = np.cumsum(gaps) - gaps[0]
+        report[f"load_{mult}"] = one_leg(f"{mult:.1f}x", mult,
+                                         list(arrivals))
+    sat = one_leg("sat", float("inf"), [0.0] * n_requests)
+    report["saturated"] = sat
+    sustained = sat["achieved_frames_per_s"]
+    report["sustained_frames_per_s"] = sustained
+    report["throughput_ratio"] = sustained / sync_fps if sync_fps else 0.0
+    print(f"[bench] async saturated throughput: {sustained:.0f} frames/s = "
+          f"{report['throughput_ratio']:.2f}x the sync chunked pool")
+    return report, parity_ok
+
+
 # sweep legs: (hidden, spmv_path).  The auto legs pin the dense-mirror route
 # (every gated config has S*(1-gamma) >= 1); the forced-scatter leg pins the
 # scatter kernels, which auto would otherwise never exercise here.
@@ -182,6 +320,16 @@ SWEEP_CAP = 16
 # speedup at hidden=128 / capacity 16 is >= 3x (dispatch amortisation).
 SWEEP_CHUNK_HIDDEN = 128
 SWEEP_CHUNK_GRID = (1, 8, 32)
+# async open-loop leg: offered-load multipliers (x the sync chunked pool's
+# throughput) for the latency-vs-load rows, and the CI floor on the
+# saturated-throughput ratio.  The async front-end runs the identical
+# chunked dispatch loop, so the saturated ratio measures pure event-loop
+# overhead (client-task wakeups, admission pumping between chunks):
+# ~0.85-0.9x at hidden=128 / ~10 ms chunks on a 2-core CPU box, and
+# closer to 1x as per-chunk device time grows.  The floor is set low
+# enough that shared-runner noise cannot flake the job:
+ASYNC_LOADS = (0.5, 1.0, 2.0)
+ASYNC_FLOOR = 0.75
 
 
 def main() -> int:
@@ -207,6 +355,11 @@ def main() -> int:
                     help="crossover gate: hidden in {128, 512} at m=16, "
                          "capacity 16; exit 1 if the pool is ever slower "
                          "than batch-1 or parity fails")
+    ap.add_argument("--async-load", action="store_true",
+                    help="open-loop Poisson load generator against the "
+                         "asyncio front-end: latency vs offered load plus "
+                         "sustained-throughput ratio vs the sync chunked "
+                         "pool (exit 1 on parity failure)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--emit-json", metavar="PATH", default=None,
                     help="write the report as JSON (--sweep defaults to "
@@ -258,12 +411,45 @@ def main() -> int:
         ok = ok and cparity and cfast
         report[f"chunked_hidden_{SWEEP_CHUNK_HIDDEN}"] = dict(
             crep, parity=cparity)
+        # async open-loop leg: the asyncio front-end must sustain at least
+        # ASYNC_FLOOR x the sync chunked pool at the same chunk size
+        # (measured ~1x: it runs the identical chunked dispatch loop):
+        arep, aparity = bench_async_load(
+            SWEEP_CHUNK_HIDDEN, args.layers, args.input_dim, args.classes,
+            args.frames, 3 * args.requests, SWEEP_CAP, args.theta,
+            args.gamma, m=16, capacity_frac=args.capacity_frac,
+            chunk=cmax, loads=ASYNC_LOADS)
+        aratio = arep["throughput_ratio"]
+        afast = aratio >= ASYNC_FLOOR
+        print(f"[bench] sweep async hidden={SWEEP_CHUNK_HIDDEN}: parity="
+              f"{'ok' if aparity else 'FAIL'} saturated={aratio:.2f}x sync "
+              f"chunked (floor {ASYNC_FLOOR}) -> "
+              f"{'PASS' if (aparity and afast) else 'FAIL'}")
+        ok = ok and aparity and afast
+        report[f"async_hidden_{SWEEP_CHUNK_HIDDEN}_chunk_{cmax}"] = dict(
+            arep, parity=aparity)
         if args.json:
             print(json.dumps(report, indent=2))
         with open(emit, "w") as f:
             json.dump(report, f, indent=2)
         print(f"[bench] wrote {emit}")
         return 0 if ok else 1
+
+    if args.async_load:
+        chunk = args.chunk_frames or 32
+        report, parity_ok = bench_async_load(
+            args.hidden, args.layers, args.input_dim, args.classes,
+            args.frames, args.requests, max(
+                int(c) for c in args.capacities.split(",")), args.theta,
+            args.gamma, args.m, args.capacity_frac, chunk=chunk,
+            loads=ASYNC_LOADS)
+        if args.json:
+            print(json.dumps(report, indent=2))
+        if args.emit_json:
+            with open(args.emit_json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"[bench] wrote {args.emit_json}")
+        return 0 if parity_ok else 1
 
     caps = [int(c) for c in args.capacities.split(",")]
     report, parity_ok = bench_config(

@@ -259,6 +259,23 @@ def bank_rows(
     return jax.vmap(one)(buf, per_slot, start)
 
 
+def gather_rows(buf: jax.Array, start: jax.Array, n: int) -> jax.Array:
+    """Inverse of ``bank_rows``: slice each slot's last-banked chunk back out.
+
+    buf [B, T_pad, C], start [B] int32, static n -> rows [B, n, C], where
+    row b is ``buf[b, start[b] : start[b]+n]``.  One vmapped dynamic_slice
+    — the partial-logits streaming path (`SessionPool.stream_partials`)
+    uses it to snapshot ONLY the chunk's rows for every live slot, so a
+    streamed chunk costs a [B, n, C] copy + fetch instead of re-copying
+    the whole [B, T_pad, C] output buffer.  The caller guarantees
+    ``start[b] + n <= T_pad`` (the serving pool pads the buffer's time
+    axis by chunk_frames), so the slice never clamps."""
+    def one(buf_b, st):
+        return jax.lax.dynamic_slice(buf_b, (st, 0), (n, buf_b.shape[-1]))
+
+    return jax.vmap(one)(buf, start)
+
+
 def delta_spmv_dense_gather(
     w: jax.Array, idx: jax.Array, ds_vals: jax.Array
 ) -> jax.Array:

@@ -1,6 +1,7 @@
 """Serving launcher: batched decode for any --arch, or the paper's
-streaming Spartus engine for the LSTM AM (batch-1, or the
-continuous-batching session pool with --pool N).
+streaming Spartus engine for the LSTM AM (batch-1, the continuous-batching
+session pool with --pool N, or the asyncio streaming front-end with
+--async).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --steps 32
@@ -8,6 +9,28 @@ continuous-batching session pool with --pool N).
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --requests 24
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 \
         --chunk-frames 32    # chunked device tick loop (1 dispatch / 32 frames)
+    PYTHONPATH=src python -m repro.launch.serve --spartus --async --pool 8 \
+        --clients 8          # TCP/JSON-lines streaming server + demo clients
+    PYTHONPATH=src python -m repro.launch.serve --spartus --async --pool 8 \
+        --clients 0 --port 8765   # serve forever on localhost:8765
+
+The --async mode exposes the `AsyncSpartusServer` over a localhost
+TCP socket speaking newline-delimited JSON (one object per line):
+
+    client -> {"op": "open",   "id": 0}
+    client -> {"op": "frames", "id": 0, "frames": [[...], ...]}   # [n, D]
+    client -> {"op": "close",  "id": 0}        # end of utterance
+    client -> {"op": "cancel", "id": 0}        # abandon mid-utterance
+    server -> {"event": "partial", "id": 0, "t0": 0, "logits": [[...], ...]}
+    server -> {"event": "done", "id": 0, "n_frames": 40,
+               "latency_ms": ..., "ttfl_ms": ..., "queue_wait_ms": ...}
+    server -> {"event": "cancelled", "id": 0}
+    server -> {"event": "error", "id": 0, "message": "..."}
+
+`id` is chosen by the client and scopes to its connection; multiple
+streams may be multiplexed over one connection.  Partial logits arrive
+per chunk as they are produced (`target_chunk_ms` paces the boundaries);
+`done` closes the stream with its latency breakdown.
 """
 from __future__ import annotations
 
@@ -126,6 +149,165 @@ def serve_spartus(args):
           f"({rep.batch1_throughput_gops:.0f} GOp/s effective)")
 
 
+def serve_spartus_async(args):
+    """--async: the asyncio streaming front-end behind a localhost
+    TCP/JSON-lines protocol (see the module docstring), plus optional
+    in-process demo clients that stream utterances and print latency.
+
+    Uses an untrained CBTD-pruned model (the protocol/latency demo does
+    not need trained weights; run --pool mode for the trained pipeline)."""
+    import asyncio
+    import json
+
+    import numpy as np
+
+    from repro.data.speech import SpeechConfig, SpeechDataset
+    from repro.models import lstm_am
+    from repro.serving import AsyncSpartusServer, BatchedSpartusEngine, \
+        EngineConfig
+
+    data_cfg = SpeechConfig(max_frames=64)
+    cfg = lstm_am.LSTMAMConfig(input_dim=data_cfg.feat_dim,
+                               hidden_dim=args.hidden, n_layers=2,
+                               n_classes=data_cfg.vocab)
+    params = lstm_am.cbtd_prune_stacks(
+        lstm_am.init_params(jax.random.key(0), cfg),
+        gamma=args.gamma, m=8)
+    engine = BatchedSpartusEngine(
+        params, cfg, EngineConfig(theta=args.theta, gamma=args.gamma, m=8))
+    capacity = max(args.pool, 1)
+    chunk = args.chunk_frames or 8
+
+    def jline(writer, obj):
+        writer.write((json.dumps(obj) + "\n").encode())
+
+    async def handle_conn(server, reader, writer):
+        handles = {}
+        pumps = []
+
+        async def pump_out(cid, handle):
+            try:
+                async for p in handle:
+                    jline(writer, {"event": "partial", "id": cid,
+                                   "t0": p.t0, "logits": p.rows.tolist()})
+                    await writer.drain()
+                r = await handle.result()
+                jline(writer, {
+                    "event": "done", "id": cid,
+                    "n_frames": int(r.logits.shape[0]),
+                    "latency_ms": r.wall_latency_s * 1e3,
+                    "ttfl_ms": r.ttfl_s * 1e3,
+                    "queue_wait_ms": r.queue_wait_s * 1e3})
+                await writer.drain()
+            except asyncio.CancelledError:
+                try:
+                    jline(writer, {"event": "cancelled", "id": cid})
+                    await writer.drain()
+                except (ConnectionError, RuntimeError):
+                    pass             # connection already gone
+                raise
+
+        try:
+            while line := await reader.readline():
+                msg = None           # stays None if this line fails to parse
+                try:
+                    msg = json.loads(line)
+                    op, cid = msg["op"], msg.get("id", 0)
+                    if op == "open":
+                        handles[cid] = await server.stream(want_partials=True)
+                        pumps.append(asyncio.create_task(
+                            pump_out(cid, handles[cid])))
+                    elif op == "frames":
+                        await handles[cid].send(
+                            np.asarray(msg["frames"], np.float32))
+                    elif op == "close":
+                        handles[cid].close()
+                    elif op == "cancel":
+                        handles[cid].cancel()
+                    else:
+                        raise ValueError(f"unknown op {op!r}")
+                except Exception as e:  # protocol errors answer in-band
+                    jline(writer, {"event": "error",
+                                   "id": msg.get("id") if isinstance(msg, dict)
+                                   else None, "message": str(e)})
+                    await writer.drain()
+        finally:
+            for cid, h in handles.items():
+                h.cancel()           # connection gone: abandon open streams
+            for t in pumps:
+                t.cancel()
+            # retrieve the pumps' outcomes BEFORE closing the transport so
+            # a cancelled pump's last write never lands on a closed writer
+            # (and no "exception was never retrieved" warnings are logged):
+            await asyncio.gather(*pumps, return_exceptions=True)
+            writer.close()
+
+    async def demo_client(port, cid, feats):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        jline(writer, {"op": "open", "id": cid})
+        for j in range(0, len(feats), 8):       # stream in 8-frame slices
+            jline(writer, {"op": "frames", "id": cid,
+                           "frames": feats[j:j + 8].tolist()})
+            await writer.drain()
+            await asyncio.sleep(0.005)
+        jline(writer, {"op": "close", "id": cid})
+        await writer.drain()
+        rows, done = [], None
+        while line := await reader.readline():
+            msg = json.loads(line)
+            if msg["event"] == "partial":
+                rows.append(np.asarray(msg["logits"], np.float32))
+            elif msg["event"] == "done":
+                done = msg
+                break
+            else:
+                raise RuntimeError(f"server error: {msg}")
+        writer.close()
+        return cid, np.concatenate(rows), done
+
+    async def run():
+        server = AsyncSpartusServer(
+            engine, capacity, chunk_frames=chunk,
+            target_chunk_ms=args.target_chunk_ms, max_frames=64,
+            max_pending=4 * capacity)
+        async with server:
+            tcp = await asyncio.start_server(
+                lambda r, w: handle_conn(server, r, w),
+                "127.0.0.1", args.port)
+            port = tcp.sockets[0].getsockname()[1]
+            mode = (f"{args.target_chunk_ms:.0f} ms/chunk paced"
+                    if args.target_chunk_ms else "free-run")
+            print(f"[serve] async Spartus server on 127.0.0.1:{port} "
+                  f"(capacity {capacity}, {chunk}-frame chunks, {mode})")
+            if args.clients <= 0:
+                print("[serve] serving forever (ctrl-c to stop) ...")
+                async with tcp:
+                    await tcp.serve_forever()
+                return
+            n = args.clients
+            data = SpeechDataset(data_cfg, n)
+            feats, n_frames, *_ = next(data)
+            utts = [np.asarray(feats[i, :max(int(n_frames[i]), 8)],
+                               np.float32) for i in range(n)]
+            out = await asyncio.gather(
+                *[demo_client(port, i, utts[i]) for i in range(n)])
+            tcp.close()
+            await tcp.wait_closed()
+            for cid, streamed, done in out:
+                assert streamed.shape[0] == utts[cid].shape[0]
+            stats = server.stats()
+            print(f"[serve] {n} concurrent TCP clients served "
+                  f"{stats.total_frames} frames; per-client latency "
+                  f"p50 {stats.p50_latency_s*1e3:.0f} ms / "
+                  f"p95 {stats.p95_latency_s*1e3:.0f} ms, "
+                  f"first logit p50 {stats.p50_ttfl_s*1e3:.0f} ms, "
+                  f"queue wait p95 {stats.p95_queue_wait_s*1e3:.0f} ms")
+            print(f"[serve] dispatch economy: {stats.n_dispatches} dispatches "
+                  f"({stats.dispatches_per_frame:.3f}/frame)")
+
+    asyncio.run(run())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -143,9 +325,24 @@ def main():
                     help="number of streaming requests for --pool mode")
     ap.add_argument("--chunk-frames", type=int, default=0,
                     help="--pool mode: frames advanced per device dispatch "
-                         "(0 = per-frame ticks)")
+                         "(0 = per-frame ticks; --async defaults to 8)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="asyncio streaming front-end over localhost "
+                         "TCP/JSON-lines (requires --spartus)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--async: TCP port (0 = ephemeral, printed)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="--async: in-process demo clients to run "
+                         "(0 = serve forever)")
+    ap.add_argument("--target-chunk-ms", type=float, default=0.0,
+                    help="--async: wall-clock pacing per chunk boundary "
+                         "(0 = free-run)")
     args = ap.parse_args()
-    if args.spartus:
+    if args.async_mode:
+        if not args.spartus:
+            ap.error("--async requires --spartus")
+        serve_spartus_async(args)
+    elif args.spartus:
         serve_spartus(args)
     else:
         serve_arch(args)

@@ -1,10 +1,25 @@
 """Serving: the Spartus datapath as an inference service.
 
 - `engine`         — paper-faithful batch-1 streaming engine (SpartusEngine)
-- `batched_engine` — continuous-batching multi-session engine (step_batch)
-- `scheduler`      — SessionPool admission/eviction + serve_requests driver
-- `telemetry`      — device-resident aggregated sparsity counters
+- `batched_engine` — continuous-batching multi-session engine (step_batch /
+                     step_frames / chunked step_chunk + output snapshots)
+- `scheduler`      — SessionPool admission/eviction (incl. incremental
+                     streaming admission + partial-logits snapshots) and
+                     the synchronous serve_requests driver
+- `async_server`   — asyncio streaming front-end (AsyncSpartusServer):
+                     admission-while-running, wall-clock-paced chunks,
+                     per-chunk partial logits to per-session queues
+- `telemetry`      — device-resident aggregated sparsity counters + the
+                     shared latency percentile reduction
+
+See docs/serving.md for the architecture and docs/architecture.md for how
+serving fits the full pipeline.
 """
+from repro.serving.async_server import (
+    AsyncSpartusServer,
+    StreamClosed,
+    StreamHandle,
+)
 from repro.serving.batched_engine import (
     BatchedLayerState,
     BatchedSpartusEngine,
@@ -12,10 +27,16 @@ from repro.serving.batched_engine import (
 )
 from repro.serving.engine import EngineConfig, PackedLayer, SpartusEngine
 from repro.serving.scheduler import (
+    PartialLogits,
     RequestResult,
     ServeStats,
     SessionPool,
     StreamRequest,
     serve_requests,
 )
-from repro.serving.telemetry import TelemetryState, init_telemetry, measured_sparsity
+from repro.serving.telemetry import (
+    TelemetryState,
+    init_telemetry,
+    measured_sparsity,
+    percentile_summary,
+)

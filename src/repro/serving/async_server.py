@@ -1,0 +1,525 @@
+"""Asyncio streaming front-end over the chunked session pool.
+
+`serve_requests` (scheduler.py) is a synchronous drain loop: the full
+request list is known up front, the driver owns the thread until every
+utterance completes, and logits surface only at retirement.  Real online
+speech serving (the Spartus target: ~1 us/frame streaming inference) is
+the opposite shape — clients connect at arbitrary times, frames arrive
+incrementally as audio is captured, and the decoder downstream wants
+logits *as they are produced*, not after the utterance ends.
+
+`AsyncSpartusServer` is that front-end, built directly on the
+`SessionPool` primitives (`admit_stream`/`append_frames`/`tick`/
+`take_partials`):
+
+* **Clients** call ``await server.submit(feats)`` for a whole utterance,
+  or ``await server.stream()`` for a `StreamHandle` they feed
+  incrementally (``await h.send(frames)`` ... ``h.close()``) — or hand an
+  async iterator of frame blocks to ``submit_stream``.  Partial logits
+  stream back per chunk through the handle's `asyncio.Queue`
+  (``async for rows in handle``); the final `RequestResult` resolves the
+  handle's future.  ``h.cancel()`` abandons the utterance mid-stream and
+  frees the slot at the next chunk boundary.
+* **One background driver task** owns the pool.  Each iteration it moves
+  client-buffered frames into the pool (admissions, appends, finishes,
+  cancellations — all staged host-side, so client coroutines never touch
+  device state), runs ONE ``pool.tick`` (at most one chunk dispatch,
+  double-buffered exactly like the sync path), delivers the resolved
+  partials/results to the per-client queues, and then sleeps until the
+  next wall-clock chunk boundary (``target_chunk_ms``; 0 = free-run).
+  With ``offload_ticks=True`` the tick runs in a worker thread so the
+  event loop keeps serving client sends during the device sync.
+* **Backpressure**: at most ``max_pending`` clients may sit in the
+  admission queue; further ``submit``/``stream`` calls *await* until a
+  slot train frees, so a load spike queues at the front door instead of
+  growing unbounded host state.  Queue-wait and time-to-first-logit
+  surface per request and as p50/p95/p99 in ``server.stats()``.
+
+The streamed rows are bit-identical to the synchronous path: the driver
+runs the very same chunked `step_chunk` dispatch, so
+``concat(partials) == result.logits == serve_requests(...)`` at 1e-5
+(pinned in tests/test_async_serving.py and examples/streaming_server.py).
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.batched_engine import BatchedSpartusEngine
+from repro.serving.scheduler import (
+    PartialLogits,
+    RequestResult,
+    ServeStats,
+    SessionPool,
+    aggregate_stats,
+)
+
+_EOS = object()   # end-of-stream sentinel on a handle's partials queue
+
+
+class StreamClosed(RuntimeError):
+    """Raised when sending frames to a closed or cancelled stream."""
+
+
+class _ClientState:
+    """Driver-side bookkeeping for one connected stream (loop thread only:
+    clients buffer frames here; the driver moves them into the pool at
+    chunk boundaries, so no client coroutine ever touches device state)."""
+
+    __slots__ = ("req_id", "handle", "arrival_wall", "want_partials",
+                 "buffered", "closed", "cancelled", "admitted",
+                 "finish_sent")
+
+    def __init__(self, req_id: int, handle: "StreamHandle",
+                 arrival_wall: float, want_partials: bool):
+        self.req_id = req_id
+        self.handle = handle
+        self.arrival_wall = arrival_wall
+        self.want_partials = want_partials
+        self.buffered: List[np.ndarray] = []
+        self.closed = False
+        self.cancelled = False
+        self.admitted = False
+        self.finish_sent = False
+
+
+class StreamHandle:
+    """Client-side handle to one streaming session.
+
+    ``await send(frames)`` feeds more frames (any ``[n, D]`` block);
+    ``close()`` marks the utterance complete; ``async for rows in handle``
+    yields per-chunk partial logits (``PartialLogits``) until the stream
+    ends; ``await result()`` returns the final `RequestResult` (its
+    ``logits`` equal the concatenated partials).  ``cancel()`` abandons
+    the utterance — ``result()`` then raises `asyncio.CancelledError` and
+    the partials iterator stops.
+    """
+
+    def __init__(self, server: "AsyncSpartusServer", req_id: int):
+        self._server = server
+        self.req_id = req_id
+        self._partials: asyncio.Queue = asyncio.Queue()
+        self._result: asyncio.Future = (
+            asyncio.get_running_loop().create_future())
+        self._feed_task: Optional[asyncio.Task] = None  # submit_stream pump
+        #: set once the session holds a pool slot (backpressure observability)
+        self.admitted = asyncio.Event()
+
+    async def send(self, frames: np.ndarray) -> None:
+        """Feed one block of frames ``[n, D]`` (or a single frame ``[D]``)."""
+        self._server._client_send(self.req_id, frames)
+        await asyncio.sleep(0)   # give the driver a chance to run
+
+    def close(self) -> None:
+        """No more frames: the session retires once everything fed has
+        been consumed."""
+        self._server._client_close(self.req_id)
+
+    def cancel(self) -> None:
+        """Abandon the utterance; the slot frees at the next boundary."""
+        self._server._client_cancel(self.req_id)
+
+    async def result(self) -> RequestResult:
+        """The final `RequestResult` (raises `asyncio.CancelledError` if
+        the stream was cancelled)."""
+        return await asyncio.shield(self._result)
+
+    def __aiter__(self) -> "StreamHandle":
+        return self
+
+    async def __anext__(self) -> PartialLogits:
+        item = await self._partials.get()
+        if item is _EOS:
+            raise StopAsyncIteration
+        return item
+
+
+class AsyncSpartusServer:
+    """Admission-while-running streaming server over one
+    `BatchedSpartusEngine`.
+
+    Parameters
+    ----------
+    engine / capacity / chunk_frames / max_frames / max_buffer_frames:
+        forwarded to the underlying `SessionPool` (``chunk_frames >= 1``
+        selects the chunked tick loop; the pool streams per-chunk partial
+        logits).
+    target_chunk_ms:
+        wall-clock pacing of chunk boundaries: the driver sleeps out the
+        remainder of this budget after each tick, so a chunk's worth of
+        frames is consumed per period (real-time streaming). ``0`` =
+        free-run (throughput mode: tick as fast as the device allows).
+    max_pending:
+        admission-queue bound: at most this many clients wait for a slot;
+        further ``submit``/``stream`` calls await (backpressure).
+        ``None`` = unbounded (open-loop load generation).
+    offload_ticks:
+        run each ``pool.tick`` in a one-thread executor so the event loop
+        stays responsive (client sends land mid-chunk) — the pool is only
+        ever touched by one thread at a time, since the driver awaits the
+        tick before pumping again.  ``False`` keeps ticks on the loop
+        (slightly less overhead; fine when clients batch their sends).
+    """
+
+    def __init__(self, engine: BatchedSpartusEngine, capacity: int, *,
+                 chunk_frames: int = 8, target_chunk_ms: float = 0.0,
+                 max_pending: Optional[int] = None, max_frames: int = 64,
+                 max_buffer_frames: Optional[int] = None,
+                 offload_ticks: bool = True):
+        if chunk_frames < 1:
+            raise ValueError("AsyncSpartusServer requires chunk_frames >= 1 "
+                             "(the per-chunk partial-logits contract)")
+        self.pool = SessionPool(
+            engine, capacity, max_frames=max_frames,
+            chunk_frames=chunk_frames, max_buffer_frames=max_buffer_frames,
+            stream_partials=True)
+        self.capacity = capacity
+        self.chunk_frames = chunk_frames
+        self.target_chunk_s = target_chunk_ms * 1e-3
+        self.max_pending = max_pending
+        self._sem = (asyncio.Semaphore(max_pending)
+                     if max_pending is not None else None)
+        self._offload = offload_ticks
+        self._exec: Optional[ThreadPoolExecutor] = None
+        self._ids = itertools.count()
+        self._clients: Dict[int, _ClientState] = {}
+        self._waiting: Deque[_ClientState] = deque()
+        self._wake: Optional[asyncio.Event] = None
+        self._driver: Optional[asyncio.Task] = None
+        self._stopping = False
+        self.now = 0            # scheduler tick clock (frames granularity)
+        self._steps = 0         # ticks that advanced >= 1 slot (flush-only
+        #                         iterations excluded, like serve_requests)
+        self._completed: List[RequestResult] = []
+        self._t_start: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> None:
+        if self._driver is not None:
+            raise RuntimeError("server already started")
+        self._wake = asyncio.Event()
+        if self._offload:
+            self._exec = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="spartus-tick")
+        self._stopping = False
+        self._t_start = time.perf_counter()
+        self._driver = asyncio.create_task(self._drive(), name="spartus-drive")
+
+    async def stop(self) -> None:
+        """Drain: waits for every connected stream to finish (clients must
+        ``close()`` or ``cancel()`` their streams), then stops the driver."""
+        if self._driver is None:
+            return
+        self._stopping = True
+        self._wake.set()
+        try:
+            await self._driver
+        finally:
+            self._driver = None
+            if self._exec is not None:
+                self._exec.shutdown(wait=False)
+                self._exec = None
+
+    async def __aenter__(self) -> "AsyncSpartusServer":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- client API ----------------------------------------------------------
+
+    async def stream(self, feats: Optional[np.ndarray] = None, *,
+                     want_partials: bool = True) -> StreamHandle:
+        """Open a streaming session; awaits while the admission queue is
+        full (backpressure).  ``feats`` optionally seeds initial frames."""
+        if self._driver is None:
+            raise RuntimeError("server is not started")
+        if self._stopping:
+            raise RuntimeError("server is stopping")
+        arrival_wall = time.perf_counter()
+        if feats is not None:
+            # validate BEFORE anything is enqueued: a bad request must be
+            # a per-request error, never a poisoned admission the driver
+            # trips over later.
+            feats = self._validated(feats)
+        if self._sem is not None:
+            await self._sem.acquire()     # <- the admission-queue bound
+        req_id = next(self._ids)
+        handle = StreamHandle(self, req_id)
+        cs = _ClientState(req_id, handle, arrival_wall, want_partials)
+        if feats is not None:
+            cs.buffered.append(feats)
+        self._clients[req_id] = cs
+        self._waiting.append(cs)
+        self._wake.set()
+        return handle
+
+    async def submit(self, feats: np.ndarray, *,
+                     want_partials: bool = False) -> RequestResult:
+        """Serve one complete utterance and await its result (the simplest
+        client: no incremental feeding, partials off by default)."""
+        handle = await self.stream(feats, want_partials=want_partials)
+        handle.close()
+        return await handle.result()
+
+    async def submit_stream(
+        self, blocks: AsyncIterator[np.ndarray], *,
+        want_partials: bool = True,
+    ) -> StreamHandle:
+        """Open a session fed from an async iterator of frame blocks (a
+        background task pumps it and closes the stream at exhaustion)."""
+        handle = await self.stream(want_partials=want_partials)
+
+        async def pump() -> None:
+            try:
+                async for block in blocks:
+                    await handle.send(block)
+                handle.close()
+            except asyncio.CancelledError:
+                handle.cancel()
+                raise
+
+        # keep a strong reference: the loop only holds tasks weakly, and a
+        # GC'd feeder would silently starve the stream.
+        handle._feed_task = asyncio.create_task(
+            pump(), name=f"spartus-feed-{handle.req_id}")
+        return handle
+
+    # client ops are plain buffer writes on the loop thread; the driver
+    # moves them into the pool at the next boundary:
+
+    def _validated(self, frames: np.ndarray, already: int = 0) -> np.ndarray:
+        """Shape/dim/size checks at the client boundary, so malformed
+        input raises in the offending client's call and can never reach
+        the pool (where it would crash the shared driver)."""
+        block = _as_frames(frames)
+        if block.shape[-1] != self.pool.engine.input_dim:
+            raise ValueError(
+                f"frames must have feature dim "
+                f"{self.pool.engine.input_dim}, got {block.shape[-1]}")
+        if already + block.shape[0] > self.pool.max_buffer_frames:
+            raise ValueError(
+                f"{already + block.shape[0]} frames would exceed the "
+                f"frame-buffer growth limit (max_buffer_frames="
+                f"{self.pool.max_buffer_frames})")
+        return block
+
+    def _client_send(self, req_id: int, frames: np.ndarray) -> None:
+        cs = self._clients.get(req_id)
+        if cs is None or cs.closed or cs.cancelled:
+            raise StreamClosed(f"stream {req_id} is closed")
+        in_pool = cs.admitted and req_id in self.pool._by_req
+        already = (sum(b.shape[0] for b in cs.buffered)
+                   + (self.pool._live(req_id).n_recv if in_pool else 0))
+        cs.buffered.append(self._validated(frames, already))
+        self._wake.set()
+
+    def _client_close(self, req_id: int) -> None:
+        cs = self._clients.get(req_id)
+        if cs is None or cs.cancelled:
+            return
+        cs.closed = True
+        self._wake.set()
+
+    def _client_cancel(self, req_id: int) -> None:
+        cs = self._clients.get(req_id)
+        if cs is None or cs.cancelled:
+            return
+        cs.cancelled = True
+        self._wake.set()
+
+    # -- driver --------------------------------------------------------------
+
+    def _pump(self) -> None:
+        """Move client state into the pool (driver only, between ticks):
+        admissions for waiting clients while slots are free, then frame
+        appends / finishes / cancellations for admitted ones."""
+        pool = self.pool
+        # partial snapshots cost a per-chunk [B, C, n_classes] copy+fetch;
+        # skip them entirely while nobody subscribed (pure-submit load):
+        pool.stream_partials = any(
+            cs.want_partials for cs in self._clients.values())
+        # clients cancelled while still queued need no slot to settle:
+        if any(cs.cancelled for cs in self._waiting):
+            for cs in [c for c in self._waiting if c.cancelled]:
+                self._waiting.remove(cs)
+                self._settle_cancel(cs)
+        while self._waiting and pool.n_free:
+            cs = self._waiting[0]
+            if cs.cancelled:
+                self._waiting.popleft()
+                self._settle_cancel(cs)
+                continue
+            feats = _concat(cs.buffered)
+            cs.buffered.clear()
+            try:
+                admitted = pool.admit_stream(cs.req_id, self.now,
+                                             feats=feats,
+                                             arrival_wall=cs.arrival_wall)
+            except Exception as exc:        # a bad request fails ITSELF,
+                self._waiting.popleft()     # never the shared driver
+                self._settle_error(cs, exc)
+                continue
+            if not admitted:
+                break                       # raced a slot; retry next tick
+            self._waiting.popleft()
+            cs.admitted = True
+            cs.handle.admitted.set()
+            if self._sem is not None:
+                self._sem.release()
+            if cs.closed:
+                pool.finish_stream(cs.req_id)
+                cs.finish_sent = True
+        for cs in list(self._clients.values()):
+            if not cs.admitted:
+                continue
+            if cs.cancelled:
+                # the session may already have retired into the pool's
+                # double-buffer tail; its (unwanted) result is dropped at
+                # delivery because the client is settled here.
+                if cs.req_id in pool._by_req:
+                    pool.cancel(cs.req_id)
+                self._settle_cancel(cs)
+                continue
+            try:
+                if cs.buffered:
+                    pool.append_frames(cs.req_id, _concat(cs.buffered))
+                    cs.buffered.clear()
+                if cs.closed and not cs.finish_sent:
+                    pool.finish_stream(cs.req_id)
+                    cs.finish_sent = True
+            except Exception as exc:
+                if cs.req_id in pool._by_req:
+                    pool.cancel(cs.req_id)
+                self._settle_error(cs, exc)
+
+    def _settle_cancel(self, cs: _ClientState) -> None:
+        del self._clients[cs.req_id]
+        if not cs.admitted and self._sem is not None:
+            self._sem.release()
+        cs.handle._partials.put_nowait(_EOS)
+        if not cs.handle._result.done():
+            cs.handle._result.cancel()
+
+    def _settle_error(self, cs: _ClientState, exc: Exception) -> None:
+        """Fail ONE client's handle with its own error (driver stays up)."""
+        self._clients.pop(cs.req_id, None)
+        if not cs.admitted and self._sem is not None:
+            self._sem.release()
+        cs.handle._partials.put_nowait(_EOS)
+        if not cs.handle._result.done():
+            cs.handle._result.set_exception(exc)
+
+    def _deliver(self, partials: List[PartialLogits],
+                 finished: List[RequestResult]) -> None:
+        for p in partials:
+            cs = self._clients.get(p.req_id)
+            if cs is not None and cs.want_partials:
+                cs.handle._partials.put_nowait(p)
+        for r in finished:
+            self._t_last = time.perf_counter()
+            self._completed.append(r)
+            cs = self._clients.pop(r.req_id, None)
+            if cs is None:
+                continue
+            cs.handle._partials.put_nowait(_EOS)
+            if not cs.handle._result.done():
+                cs.handle._result.set_result(r)
+
+    def _has_work(self) -> bool:
+        pool = self.pool
+        return (pool.max_chunk_advance() > 0 or pool.has_pending
+                or pool.has_retirable
+                or bool(self._waiting and pool.n_free))
+
+    async def _drive(self) -> None:
+        try:
+            await self._drive_loop()
+        except Exception as exc:
+            # fail loudly: every connected client sees the driver's error
+            # instead of hanging on a queue that will never fill.
+            for cs in list(self._clients.values()):
+                cs.handle._partials.put_nowait(_EOS)
+                if not cs.handle._result.done():
+                    cs.handle._result.set_exception(exc)
+            self._clients.clear()
+            self._waiting.clear()
+            raise
+
+    async def _drive_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        pool = self.pool
+        while True:
+            self._wake.clear()
+            self._pump()
+            if not self._has_work():
+                if self._stopping and not self._clients and \
+                        not self._waiting:
+                    break
+                await self._wake.wait()
+                continue
+            t0 = loop.time()
+            if self._exec is not None:
+                finished, adv = await loop.run_in_executor(
+                    self._exec, pool.tick, self.now)
+            else:
+                finished, adv = pool.tick(self.now)
+            self.now += max(adv, 1)
+            self._steps += adv
+            self._deliver(pool.take_partials(), finished)
+            if self.target_chunk_s > 0.0:
+                # wall-clock-paced boundaries: one chunk per period; the
+                # sleep is where client coroutines get the loop.
+                delay = self.target_chunk_s - (loop.time() - t0)
+                await asyncio.sleep(delay if delay > 0 else 0)
+            else:
+                await asyncio.sleep(0)      # free-run, but stay preemptible
+
+    # -- observability -------------------------------------------------------
+
+    @property
+    def n_connected(self) -> int:
+        """Streams currently open (admitted + waiting)."""
+        return len(self._clients)
+
+    def stats(self) -> ServeStats:
+        """Aggregate stats over the requests completed so far (same shape
+        as `serve_requests`' — latency/TTFL/queue-wait percentiles are
+        wall-clock, measured under whatever concurrency actually ran)."""
+        t0 = self._t_start if self._t_start is not None else 0.0
+        t1 = self._t_last if self._t_last is not None else t0
+        return aggregate_stats(
+            self._completed,
+            capacity=self.capacity,
+            n_requests=len(self._completed),
+            total_steps=self._steps,
+            wall_s=max(t1 - t0, 0.0),
+            sparsity=self.pool.measured_sparsity(),
+            chunk_frames=self.chunk_frames,
+            n_dispatches=self.pool.n_dispatches,
+            host_overlap_frac=self.pool.mean_host_overlap_frac(),
+        )
+
+
+def _as_frames(x: np.ndarray) -> np.ndarray:
+    arr = np.asarray(x, np.float32)
+    if arr.ndim == 1:
+        arr = arr[None]
+    if arr.ndim != 2:
+        raise ValueError(f"frames must be [n, D] or [D], got {arr.shape}")
+    return arr
+
+
+def _concat(blocks: List[np.ndarray]) -> Optional[np.ndarray]:
+    if not blocks:
+        return None
+    return blocks[0] if len(blocks) == 1 else np.concatenate(blocks)

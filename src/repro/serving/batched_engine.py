@@ -33,6 +33,14 @@ serving-path functions (`step_frames`, `step_chunk`) donate the incoming
 `PoolState` (and the chunk output buffer), so the state slabs are reused
 in place tick over tick instead of reallocating.
 
+Because the output buffer is donated, anything that must outlive the
+next chunk is detached device-side first: `snapshot_out` copies the
+whole buffer (retiring sessions' rows), and `snapshot_chunk` slices just
+one chunk's `[B, C, n_classes]` window (the partial-logits stream for
+live sessions — `SessionPool.stream_partials` / the async front-end).
+Both are dispatched before the next `step_chunk` and fetched one chunk
+later, overlapped with the in-flight dispatch.
+
 Per-slot numerics are identical to `SpartusEngine`: the batched kernels
 are vmaps of the very same ops, so a session's logits do not depend on
 what the other slots are doing (verified in tests/test_serving_pool.py).
@@ -98,6 +106,14 @@ class BatchedSpartusEngine(PackedSpartusModel):
         self._step_chunk = jax.jit(self._step_chunk_impl,
                                    static_argnames=("n_frames",),
                                    donate_argnums=(0, 5))
+        # output-buffer snapshots (chunked serving): full-buffer copy for
+        # retirements, chunk-window slice for streamed partial logits.
+        # Both are dispatched BEFORE the next step_chunk donates the
+        # buffer away, detaching the rows device-side; the host fetch
+        # happens one chunk later, overlapped with the next dispatch.
+        self._snapshot_out = jax.jit(lambda out: out.copy())
+        self._snapshot_chunk = jax.jit(ops.gather_rows,
+                                       static_argnames=("n",))
 
     # -- state management ----------------------------------------------------
 
@@ -309,6 +325,28 @@ class BatchedSpartusEngine(PackedSpartusModel):
             state, frames, jnp.asarray(lengths, jnp.int32),
             jnp.asarray(active, bool), jnp.asarray(reset, bool), out_buf,
             n_frames=int(n_frames))
+
+    def snapshot_out(self, out_buf: jax.Array) -> jax.Array:
+        """Device-side copy of the whole chunk output buffer (ONE op,
+        shape-stable: a single compile per pool however many sessions
+        retire).  Used to detach retiring sessions' rows before the next
+        ``step_chunk`` donates the buffer away; the retirees' rows are
+        then fetched in one D2H copy one chunk later."""
+        return self._snapshot_out(out_buf)
+
+    def snapshot_chunk(self, out_buf: jax.Array, starts: jax.Array,
+                       *, n_frames: int) -> jax.Array:
+        """Device-side slice of ONE chunk's rows for every slot:
+        ``out_buf [B, T_pad, n_classes]``, per-slot chunk-start cursors
+        ``starts [B]`` -> ``[B, n_frames, n_classes]``.
+
+        This is the live-slot counterpart of ``snapshot_out``: partial-
+        logits streaming needs every chunk's rows for every advancing
+        session, and copying the whole output buffer per chunk would
+        scale with utterance length — the window slice scales with the
+        chunk only.  Same detach-before-donation contract."""
+        return self._snapshot_chunk(out_buf, jnp.asarray(starts, jnp.int32),
+                                    n=int(n_frames))
 
     # -- telemetry -----------------------------------------------------------
 

@@ -13,6 +13,14 @@ per-step NZI occupancies that drive the hwsim performance model.
 
 ``use_pallas`` switches the kernel implementations (interpret mode on
 CPU, compiled Pallas on TPU); the XLA path is numerically identical.
+
+`SpartusEngine` is deliberately slow and simple — a Python loop per
+frame with host syncs for telemetry — because it is the parity oracle:
+the batched pool, the chunked tick loop and the async front-end are all
+pinned against its logits at 1e-5 (see docs/serving.md).  The shared
+CBCSC export (`pack_lstm_layer`, via `PackedSpartusModel`) enforces
+`blen_for(gamma)` at pack time and fixes each layer's SpMV route —
+scatter kernels vs the pack-time dense mirror (docs/kernels.md).
 """
 from __future__ import annotations
 

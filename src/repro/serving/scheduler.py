@@ -16,7 +16,12 @@ Lifecycle of a request:
   utterance `[T, D]` into the slot's device-resident feature buffer once;
   the slot's device state is re-initialised by the `reset` mask *inside*
   the next `step_frames`, so admission never triggers an extra dispatch
-  or a recompile.
+  or a recompile.  `admit_stream` admits a session whose utterance is
+  still arriving: frames are appended incrementally (`append_frames`),
+  the session simply idles ("starved") whenever it has consumed
+  everything received so far, and `finish_stream` marks the end of the
+  utterance.  A starved session costs nothing: it rides the chunk
+  masked out, exactly like a free slot.
 * `step` advances all active slots one frame in ONE jitted call
   (`step_frames`): each slot's current frame is gathered **on device** by
   the cursor carried in `PoolState` — the tick moves zero frame bytes
@@ -32,14 +37,29 @@ Lifecycle of a request:
   session's logits leave the device once, at retirement, instead of one
   `[B, n_classes]` row fetch per tick.  Admission happens at chunk
   boundaries only.
+* ``stream_partials=True`` additionally snapshots **each chunk's** rows
+  for every live slot (`engine.snapshot_chunk`, a `[B, C, n_classes]`
+  device copy — not the whole output buffer) and surfaces them one chunk
+  later as `PartialLogits`, so a streaming consumer sees logits per
+  chunk instead of only at retirement.  This is what the asyncio
+  front-end (`serving/async_server.py`) feeds to its per-session queues.
+* `tick` is the non-blocking driver entry point: one call does at most
+  one dispatch (chunk or frame), retires sessions that finished without
+  needing another dispatch, and returns `(finished_results,
+  frames_advanced)` without waiting for the device (JAX async dispatch;
+  the only sync is the previous chunk's one-copy logits fetch).
 * Idle slots ride along masked-out for free; the pool never reshapes (the
   frame buffer length is bucketed to powers of two), so the step function
-  compiles once per (capacity, bucket).
+  compiles once per (capacity, bucket).  Growth past
+  ``max_buffer_frames`` is refused at admission time with a clear error
+  instead of silently truncating.
 
-`serve_requests` is the batteries-included driver: feed it an iterable of
-requests with arrival times (in scheduler ticks), get per-request logits
-plus queue/service/latency metrics back; ``chunk_frames=C`` selects the
-chunked path (0 keeps the per-frame oracle path).
+`serve_requests` is the batteries-included synchronous driver: feed it an
+iterable of requests with arrival times (in scheduler ticks), get
+per-request logits plus queue/service/latency metrics back;
+``chunk_frames=C`` selects the chunked path (0 keeps the per-frame oracle
+path).  It is also the parity oracle the async front-end is pinned
+against in tests.
 """
 from __future__ import annotations
 
@@ -54,6 +74,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+from repro.serving import telemetry as tele
+
+#: default ceiling on the per-slot frame-buffer length (frames).  The device
+#: buffers grow by pow2 buckets up to this; an utterance that could not fit
+#: is rejected at admission with a ValueError instead of being truncated at
+#: some later chunk boundary.
+DEFAULT_MAX_BUFFER_FRAMES = 4096
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -79,14 +106,29 @@ def _device_upload(
     return frames, lengths
 
 
-@jax.jit
-def _snapshot(out_buf: jax.Array) -> jax.Array:
-    """Copy the chunk's logits buffer in ONE device op (shape-stable: a
-    single compile per pool, however many sessions retire), detaching the
-    retirees' rows before the next chunk donates the buffer away.  The
-    retired sessions' rows are then fetched in one D2H copy and sliced
-    host-side — an eager slice + fetch per session cost ~0.5 ms each."""
-    return out_buf.copy()
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _device_append(
+    frames: jax.Array, lengths: jax.Array, rows: jax.Array,
+    slots: jax.Array, starts: jax.Array, ts: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Append one wave of mid-stream frame blocks into live slots' buffers.
+
+    rows [R, A, D] (A = pow2 bucket of the wave's longest block), slots
+    [R] int32 (out-of-bounds = padding, dropped), starts [R] int32 (frame
+    offset of each block = frames received so far), ts [R] int32 new total
+    length.  One gather + vmapped ``dynamic_update_slice`` + one scatter,
+    jitted so incremental streaming admission costs one dispatch per wave
+    like the full-utterance upload.  The caller guarantees
+    ``start + A <= T_buf`` (growing the buffer first if needed) so the
+    slice never clamps into earlier frames."""
+    safe = jnp.minimum(slots, frames.shape[0] - 1)
+    cur = frames[safe]                                     # [R, T_buf, D]
+    upd = jax.vmap(
+        lambda b, r, st: jax.lax.dynamic_update_slice(b, r, (st, 0))
+    )(cur, rows, starts)
+    frames = frames.at[slots].set(upd, mode="drop")
+    lengths = lengths.at[slots].set(ts, mode="drop")
+    return frames, lengths
 
 
 @dataclasses.dataclass
@@ -112,6 +154,11 @@ class RequestResult:
     wall_latency_s: float  # wall time from eligibility to last frame
     truncated: bool = False  # stopped by max_steps with frames still pending
     #                          (logits holds the frames produced so far)
+    queue_wait_s: float = 0.0  # wall time from eligibility to slot admission
+    ttfl_s: float = 0.0        # time to first logit: wall time from
+    #                            eligibility until the first logits row was
+    #                            available host-side (== wall_latency_s when
+    #                            logits only surface at retirement)
 
     @property
     def queue_steps(self) -> int:
@@ -127,13 +174,56 @@ class RequestResult:
 
 
 @dataclasses.dataclass
+class PartialLogits:
+    """One streamed block of logits for a live session (``stream_partials``):
+    rows ``[n, n_classes]`` covering frames ``[t0, t0 + n)``."""
+
+    req_id: int
+    t0: int
+    rows: np.ndarray
+
+
+@dataclasses.dataclass
 class _Session:
-    request: StreamRequest
+    req_id: int
+    arrival_step: int
     admit_step: int
     arrival_wall: float
-    cursor: int = 0
+    admit_wall: float
+    total: Optional[int]   # utterance length; None while the client streams
+    n_recv: int = 0        # frames received (staged for device upload)
+    cursor: int = 0        # frames consumed by the engine
+    last_step: int = 0     # tick of the most recent consumed frame
     needs_reset: bool = True
+    cancelled: bool = False
+    first_logit_wall: float = 0.0  # 0.0 = no logits surfaced yet
     rows: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        """Every frame of a finished utterance has been consumed."""
+        return self.total is not None and self.cursor >= self.total
+
+    @property
+    def available(self) -> int:
+        """Frames received but not yet consumed."""
+        return self.n_recv - self.cursor
+
+    def result(self, logits: np.ndarray, *, truncated: bool = False,
+               finish_step: Optional[int] = None) -> RequestResult:
+        t_done = time.perf_counter()
+        first = self.first_logit_wall if self.first_logit_wall else t_done
+        return RequestResult(
+            req_id=self.req_id,
+            arrival_step=self.arrival_step,
+            admit_step=self.admit_step,
+            finish_step=self.last_step if finish_step is None else finish_step,
+            logits=logits,
+            wall_latency_s=t_done - self.arrival_wall,
+            truncated=truncated,
+            queue_wait_s=self.admit_wall - self.arrival_wall,
+            ttfl_s=first - self.arrival_wall,
+        )
 
 
 @dataclasses.dataclass
@@ -146,8 +236,17 @@ class _PendingChunk:
 
     sessions: List[_Session]
     slots: List[int]       # pool slot each session occupied
-    finish_steps: List[int]
     rows: jax.Array        # [B, T_pad, n_classes] device-side snapshot
+
+
+@dataclasses.dataclass
+class _PendingPartials:
+    """One chunk's per-slot logits rows (``engine.snapshot_chunk``),
+    snapshotted device-side before the next dispatch donates the output
+    buffer and fetched one chunk later, overlapped like retirements."""
+
+    entries: List[Tuple[_Session, int, int, int]]  # (session, slot, t0, n)
+    rows: jax.Array                                # [B, C, n_classes]
 
 
 @dataclasses.dataclass
@@ -180,9 +279,71 @@ class ServeStats:
     # concurrent with the in-flight device chunk; 0.0 on the per-frame
     # path, which syncs on its logits every tick:
     host_overlap_frac: float = 0.0
+    # tail latency + streaming responsiveness under concurrency:
+    p99_latency_s: float = 0.0
+    # queue wait: wall time from request eligibility to slot admission
+    # (the backpressure component of the latency):
+    p50_queue_wait_s: float = 0.0
+    p95_queue_wait_s: float = 0.0
+    p99_queue_wait_s: float = 0.0
+    # time-to-first-logit: how long a client waits before logits start
+    # streaming back (== full latency when logits only surface at
+    # retirement, i.e. the sync chunked path without stream_partials):
+    p50_ttfl_s: float = 0.0
+    p95_ttfl_s: float = 0.0
+    p99_ttfl_s: float = 0.0
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+
+def aggregate_stats(
+    results: Sequence[RequestResult],
+    *,
+    capacity: int,
+    n_requests: int,
+    total_steps: int,
+    wall_s: float,
+    sparsity: Dict[str, float],
+    truncated: bool = False,
+    chunk_frames: int = 0,
+    n_dispatches: int = 0,
+    host_overlap_frac: float = 0.0,
+) -> ServeStats:
+    """Reduce per-request results to the aggregate `ServeStats` (shared by
+    the synchronous `serve_requests` driver and the asyncio front-end)."""
+    frames = int(sum(r.logits.shape[0] for r in results))
+    lat = [r.wall_latency_s for r in results]
+    tas = np.array([r.turnaround_steps for r in results], np.float64)
+    pl = tele.percentile_summary(lat, "latency_s")
+    pq = tele.percentile_summary([r.queue_wait_s for r in results],
+                                 "queue_wait_s")
+    pt = tele.percentile_summary([r.ttfl_s for r in results], "ttfl_s")
+    return ServeStats(
+        capacity=capacity,
+        n_requests=n_requests,
+        total_frames=frames,
+        total_steps=total_steps,
+        wall_s=wall_s,
+        frames_per_s=frames / wall_s if wall_s > 0 else float("inf"),
+        p50_latency_s=pl["p50_latency_s"],
+        p95_latency_s=pl["p95_latency_s"],
+        p99_latency_s=pl["p99_latency_s"],
+        p50_turnaround_steps=float(np.percentile(tas, 50)) if len(tas) else 0.0,
+        p95_turnaround_steps=float(np.percentile(tas, 95)) if len(tas) else 0.0,
+        sparsity=sparsity,
+        truncated=truncated,
+        chunk_frames=chunk_frames,
+        n_dispatches=n_dispatches,
+        dispatches_per_frame=n_dispatches / frames if frames else 0.0,
+        host_overlap_frac=host_overlap_frac,
+        p50_queue_wait_s=pq["p50_queue_wait_s"],
+        p95_queue_wait_s=pq["p95_queue_wait_s"],
+        p99_queue_wait_s=pq["p99_queue_wait_s"],
+        p50_ttfl_s=pt["p50_ttfl_s"],
+        p95_ttfl_s=pt["p95_ttfl_s"],
+        p99_ttfl_s=pt["p99_ttfl_s"],
+    )
 
 
 def _frame_bucket(n: int, floor: int = 64) -> int:
@@ -205,17 +366,33 @@ class SessionPool:
     copies (the old `step_batch` path re-staged every slot's frame on host
     each tick, which at large hidden sizes cost more than the math).
 
+    ``admit_stream`` admits a session before its utterance is complete:
+    `append_frames` stages further frame blocks (uploaded one jitted wave
+    per boundary, like admissions), `finish_stream` closes the utterance,
+    and `cancel` abandons it (the slot frees at the next boundary).  A
+    session that has consumed everything received so far simply idles.
+
     With ``chunk_frames=C >= 1`` the pool runs the chunked tick loop:
     ``step_chunk`` advances every active slot up to C frames in ONE
     dispatch and banks logits in a per-slot device output buffer
     `[B, T_buf, n_classes]`; retired sessions' logits are fetched once, at
     retirement, double-buffered one chunk behind the in-flight dispatch.
-    A chunked pool steps with ``step_chunk``/``flush`` only (``step``
-    raises: the two modes account logits differently).
+    ``stream_partials=True`` also snapshots each chunk's `[B, C,
+    n_classes]` rows so live sessions stream partial logits per chunk
+    (``take_partials``).  A chunked pool steps with
+    ``step_chunk``/``flush``/``tick`` only (``step`` raises: the two modes
+    account logits differently).
+
+    An utterance longer than ``max_buffer_frames`` (whether declared at
+    admission or accumulated by appends) is rejected with a ValueError:
+    the device frame buffers grow in pow2 buckets up to that ceiling and
+    nothing in the pool ever truncates silently.
     """
 
     def __init__(self, engine: BatchedSpartusEngine, capacity: int,
-                 max_frames: int = 64, chunk_frames: int = 0):
+                 max_frames: int = 64, chunk_frames: int = 0,
+                 max_buffer_frames: Optional[int] = None,
+                 stream_partials: bool = False):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if chunk_frames < 0:
@@ -223,8 +400,17 @@ class SessionPool:
         self.engine = engine
         self.capacity = capacity
         self.chunk_frames = chunk_frames
+        self.stream_partials = stream_partials
+        self.max_buffer_frames = (DEFAULT_MAX_BUFFER_FRAMES
+                                  if max_buffer_frames is None
+                                  else int(max_buffer_frames))
+        if max_frames > self.max_buffer_frames:
+            raise ValueError(
+                f"max_frames={max_frames} exceeds max_buffer_frames="
+                f"{self.max_buffer_frames}")
         self.state: PoolState = engine.init_state(capacity)
         self._slots: List[Optional[_Session]] = [None] * capacity
+        self._by_req: Dict[int, int] = {}
         # device-resident per-slot feature buffers, uploaded at admission:
         self._t_buf = _frame_bucket(max_frames)
         self._frames = jnp.zeros((capacity, self._t_buf, engine.input_dim),
@@ -239,10 +425,13 @@ class SessionPool:
         self._out: Optional[jax.Array] = (
             engine.init_out_buf(capacity, self._t_buf + chunk_frames)
             if chunk_frames else None)
-        self._pending: Optional[_PendingChunk] = None
+        self._pending: List[_PendingChunk] = []
+        self._pending_partials: List[_PendingPartials] = []
+        self._partials: List[PartialLogits] = []
         # admissions staged host-side, flushed to device in ONE batched
-        # upload at the next step/chunk boundary:
+        # upload at the next step/chunk boundary; appends staged likewise:
         self._staged: List[Tuple[int, np.ndarray]] = []
+        self._staged_appends: List[Tuple[int, int, np.ndarray]] = []
         # observability: buffer growths (should be 0 when pre-sized),
         # dispatches issued, and per-chunk host-overlap fractions:
         self.n_frame_grows = 0
@@ -259,83 +448,238 @@ class SessionPool:
 
     @property
     def has_pending(self) -> bool:
-        """Chunked mode: retired sessions whose logits fetch is still
-        outstanding (resolved by the next ``step_chunk`` or ``flush``)."""
-        return self._pending is not None
+        """Chunked mode: retired sessions (or streamed chunks) whose host
+        fetch is still outstanding (resolved by the next ``step_chunk``,
+        ``tick`` or ``flush``)."""
+        return bool(self._pending or self._pending_partials
+                    or self._partials)
+
+    @property
+    def has_retirable(self) -> bool:
+        """Sessions that can retire (or be reaped) without another
+        dispatch: finished-and-fully-consumed streams, and cancellations
+        awaiting their boundary."""
+        return any(s is not None and (s.done or s.cancelled)
+                   for s in self._slots)
+
+    # -- admission -----------------------------------------------------------
 
     def admit(self, request: StreamRequest, now: int,
               arrival_wall: Optional[float] = None) -> bool:
-        """Attach `request` to a free slot; False if the pool is full."""
+        """Attach `request` (a complete utterance) to a free slot; False if
+        the pool is full.  Raises ValueError if the utterance could never
+        fit the frame buffers (``max_buffer_frames``)."""
         if request.n_frames == 0:
             raise ValueError(f"request {request.req_id} has no frames")
-        if request.feats.shape[-1] != self.engine.input_dim:
+        feats = np.asarray(request.feats, np.float32)
+        return self._bind(request.req_id, request.arrival_step, now, feats,
+                          total=request.n_frames, arrival_wall=arrival_wall)
+
+    def admit_stream(self, req_id: int, now: int,
+                     feats: Optional[np.ndarray] = None,
+                     arrival_step: Optional[int] = None,
+                     arrival_wall: Optional[float] = None) -> bool:
+        """Admit a session whose utterance is still arriving; False if the
+        pool is full.  ``feats`` optionally carries the frames received so
+        far; more arrive via ``append_frames`` and ``finish_stream`` closes
+        the utterance.  The session idles (masked out, free) whenever it
+        has consumed everything received."""
+        feats = (np.zeros((0, self.engine.input_dim), np.float32)
+                 if feats is None else np.asarray(feats, np.float32))
+        return self._bind(req_id, now if arrival_step is None else
+                          arrival_step, now, feats, total=None,
+                          arrival_wall=arrival_wall)
+
+    def _bind(self, req_id: int, arrival_step: int, now: int,
+              feats: np.ndarray, total: Optional[int],
+              arrival_wall: Optional[float]) -> bool:
+        if req_id in self._by_req:
+            raise ValueError(f"request {req_id} is already in the pool")
+        if feats.size and feats.shape[-1] != self.engine.input_dim:
             raise ValueError(
-                f"request {request.req_id}: feature dim "
-                f"{request.feats.shape[-1]} != engine input dim "
-                f"{self.engine.input_dim}")
+                f"request {req_id}: feature dim {feats.shape[-1]} != "
+                f"engine input dim {self.engine.input_dim}")
+        n = int(feats.shape[0])
+        if max(n, total or 0) > self.max_buffer_frames:
+            raise ValueError(
+                f"request {req_id}: utterance of {max(n, total or 0)} frames "
+                f"exceeds the frame-buffer growth limit "
+                f"(max_buffer_frames={self.max_buffer_frames}); split the "
+                f"stream or build the pool with a larger limit")
         for k in range(self.capacity):
             if self._slots[k] is None:
+                wall = (time.perf_counter() if arrival_wall is None
+                        else arrival_wall)
                 self._slots[k] = _Session(
-                    request=request, admit_step=now,
-                    arrival_wall=(time.perf_counter() if arrival_wall is None
-                                  else arrival_wall))
+                    req_id=req_id, arrival_step=arrival_step,
+                    admit_step=now, arrival_wall=wall,
+                    admit_wall=time.perf_counter(), total=total,
+                    n_recv=n, last_step=now - 1)
+                self._by_req[req_id] = k
                 # host-side staging only; the device upload happens once
-                # per admission wave, at the next step/chunk boundary
-                self._staged.append(
-                    (k, np.asarray(request.feats, np.float32)))
+                # per admission wave, at the next step/chunk boundary.
+                # Zero-length stagings still clear the slot's stale device
+                # length from its previous occupant.
+                self._staged.append((k, feats))
                 return True
         return False
 
-    def _flush_uploads(self) -> None:
-        """One batched H2D copy of every utterance admitted since the last
-        step (the whole admission wave: [R, T_buf, D] in one ``device_put``
-        + one jitted scatter, with R bucketed to a power of two so at most
-        log2(capacity) variants ever compile).
+    def _live(self, req_id: int) -> _Session:
+        if req_id not in self._by_req:
+            raise KeyError(f"request {req_id} is not in the pool")
+        sess = self._slots[self._by_req[req_id]]
+        assert sess is not None
+        return sess
 
-        The only host->device bytes are the new utterances themselves:
-        when a long utterance outgrows the bucket, the frame slab is
-        reallocated ONCE, straight to the new utterance's bucket, and the
-        resident slots' frames are copied device->device — never re-staged
-        from host (regression-tested in tests/test_chunked_serving.py).
+    def append_frames(self, req_id: int, feats: np.ndarray) -> None:
+        """Stage additional frames for a live streaming session (uploaded
+        in one jitted wave at the next boundary)."""
+        sess = self._live(req_id)
+        if sess.total is not None:
+            raise ValueError(f"request {req_id} is already finished")
+        if sess.cancelled:
+            raise ValueError(f"request {req_id} was cancelled")
+        feats = np.asarray(feats, np.float32)
+        if feats.ndim != 2 or feats.shape[-1] != self.engine.input_dim:
+            raise ValueError(
+                f"request {req_id}: appended frames must be [n, "
+                f"{self.engine.input_dim}], got {feats.shape}")
+        if feats.shape[0] == 0:
+            return
+        new_total = sess.n_recv + int(feats.shape[0])
+        if new_total > self.max_buffer_frames:
+            raise ValueError(
+                f"request {req_id}: appending {feats.shape[0]} frames would "
+                f"reach {new_total} frames, past the frame-buffer growth "
+                f"limit (max_buffer_frames={self.max_buffer_frames})")
+        self._staged_appends.append(
+            (self._by_req[req_id], sess.n_recv, feats))
+        sess.n_recv = new_total
+
+    def finish_stream(self, req_id: int) -> None:
+        """No more frames: the session retires once it has consumed
+        everything received (possibly without another dispatch)."""
+        sess = self._live(req_id)
+        if sess.total is None:
+            sess.total = sess.n_recv
+
+    def cancel(self, req_id: int) -> None:
+        """Abandon a live session: its slot frees at the next boundary and
+        no result is produced."""
+        sess = self._live(req_id)
+        sess.cancelled = True
+
+    def _reap_cancelled(self) -> None:
+        """Free cancelled sessions' slots and drop their staged uploads
+        (called at every boundary, before masks are computed)."""
+        dead = [k for k, s in enumerate(self._slots)
+                if s is not None and s.cancelled]
+        if not dead:
+            return
+        gone = set(dead)
+        for k in dead:
+            sess = self._slots[k]
+            del self._by_req[sess.req_id]
+            self._slots[k] = None
+        self._staged = [(k, f) for k, f in self._staged if k not in gone]
+        self._staged_appends = [(k, st, f) for k, st, f in
+                                self._staged_appends if k not in gone]
+
+    # -- device upload staging ----------------------------------------------
+
+    def _merged_appends(self) -> List[Tuple[int, int, np.ndarray]]:
+        """Coalesce staged append blocks per slot (they are contiguous by
+        construction) so the wave carries one entry per slot."""
+        merged: Dict[int, Tuple[int, List[np.ndarray]]] = {}
+        for k, start, feats in self._staged_appends:
+            if k in merged:
+                merged[k][1].append(feats)
+            else:
+                merged[k] = (start, [feats])
+        return [(k, start, np.concatenate(blocks) if len(blocks) > 1
+                 else blocks[0]) for k, (start, blocks) in merged.items()]
+
+    def _grow_buffers(self, t_need: int) -> None:
+        """ONE device-side realloc straight to ``t_need``'s pow2 bucket;
+        resident slots' frames are copied device->device, never re-staged
+        from host (regression-tested in tests/test_chunked_serving.py)."""
+        old_t = self._t_buf
+        new_t = _frame_bucket(t_need, floor=old_t)
+        grown = jnp.zeros((self.capacity, new_t, self.engine.input_dim),
+                          jnp.float32)
+        self._frames = grown.at[:, :old_t, :].set(self._frames)
+        if self._out is not None:
+            out = jnp.zeros((self.capacity, new_t + self.chunk_frames,
+                             self.engine.n_classes), jnp.float32)
+            self._out = out.at[
+                :, :old_t + self.chunk_frames, :].set(self._out)
+        self._t_buf = new_t
+        self.n_frame_grows += 1
+
+    def _flush_uploads(self) -> None:
+        """One batched H2D copy of every utterance admitted — and every
+        frame block appended — since the last step (the whole admission
+        wave: [R, T_buf, D] in one ``device_put`` + one jitted scatter,
+        with R bucketed to a power of two so at most log2(capacity)
+        variants ever compile; appends go in a second [R, A, D] wave).
+
+        The only host->device bytes are the new frames themselves: when a
+        long utterance outgrows the bucket, the frame slab is reallocated
+        ONCE, straight to the needed bucket, and the resident slots'
+        frames are copied device->device — never re-staged from host.
         Growth recompiles the step for the new bucket, so drivers pre-size
         ``max_frames`` to the longest known utterance."""
-        if not self._staged:
-            return
-        t_max = max(f.shape[0] for _, f in self._staged)
-        if t_max > self._t_buf:
-            old_t, new_t = self._t_buf, _frame_bucket(t_max,
-                                                      floor=self._t_buf)
-            grown = jnp.zeros((self.capacity, new_t, self.engine.input_dim),
-                              jnp.float32)
-            self._frames = grown.at[:, :old_t, :].set(self._frames)
-            if self._out is not None:
-                out = jnp.zeros((self.capacity, new_t + self.chunk_frames,
-                                 self.engine.n_classes), jnp.float32)
-                self._out = out.at[
-                    :, :old_t + self.chunk_frames, :].set(self._out)
-            self._t_buf = new_t
-            self.n_frame_grows += 1
-        rb = _frame_bucket(len(self._staged), floor=1)
-        rows = np.zeros((rb, self._t_buf, self.engine.input_dim), np.float32)
-        slots = np.full((rb,), self.capacity, np.int32)  # OOB pad: dropped
-        ts = np.zeros((rb,), np.int32)
-        for i, (k, feats) in enumerate(self._staged):
-            rows[i, :feats.shape[0]] = feats  # zero tail clears stale rows
-            slots[i] = k
-            ts[i] = feats.shape[0]
-        self._staged.clear()
-        self._frames, self._lengths = _device_upload(
-            self._frames, self._lengths, jax.device_put(rows), slots, ts)
+        appends = self._merged_appends()
+        a_pad = (_frame_bucket(max(f.shape[0] for _, _, f in appends),
+                               floor=1) if appends else 0)
+        t_need = max(
+            [f.shape[0] for _, f in self._staged] +
+            [start + a_pad for _, start, _ in appends] + [0])
+        if t_need > self._t_buf:
+            self._grow_buffers(t_need)
+        if self._staged:
+            rb = _frame_bucket(len(self._staged), floor=1)
+            rows = np.zeros((rb, self._t_buf, self.engine.input_dim),
+                            np.float32)
+            slots = np.full((rb,), self.capacity, np.int32)  # OOB pad: drop
+            ts = np.zeros((rb,), np.int32)
+            for i, (k, feats) in enumerate(self._staged):
+                rows[i, :feats.shape[0]] = feats  # zero tail clears stale
+                slots[i] = k
+                ts[i] = feats.shape[0]
+            self._staged.clear()
+            self._frames, self._lengths = _device_upload(
+                self._frames, self._lengths, jax.device_put(rows), slots, ts)
+        if appends:
+            rb = _frame_bucket(len(appends), floor=1)
+            rows = np.zeros((rb, a_pad, self.engine.input_dim), np.float32)
+            slots = np.full((rb,), self.capacity, np.int32)
+            starts = np.zeros((rb,), np.int32)
+            ts = np.zeros((rb,), np.int32)
+            for i, (k, start, feats) in enumerate(appends):
+                rows[i, :feats.shape[0]] = feats
+                slots[i] = k
+                starts[i] = start
+                ts[i] = start + feats.shape[0]
+            self._staged_appends.clear()
+            self._frames, self._lengths = _device_append(
+                self._frames, self._lengths, jax.device_put(rows), slots,
+                starts, ts)
 
     def _masks(self) -> Tuple[np.ndarray, np.ndarray]:
+        """active = occupied AND has unconsumed frames (a starved streaming
+        session rides along masked out); reset = admitted since the last
+        dispatch (applied even if the slot starts starved)."""
         active = np.zeros((self.capacity,), bool)
         reset = np.zeros((self.capacity,), bool)
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
-            active[k] = True
+            active[k] = sess.available > 0
             reset[k] = sess.needs_reset
         return active, reset
+
+    # -- per-frame tick loop -------------------------------------------------
 
     def step(self, now: int) -> List[RequestResult]:
         """Advance every active session one frame (one jitted call).
@@ -344,6 +688,7 @@ class SessionPool:
             raise RuntimeError(
                 "this pool was built with chunk_frames >= 1; "
                 "drive it with step_chunk()/flush(), not step()")
+        self._reap_cancelled()
         active, reset = self._masks()
         if not active.any():
             return []
@@ -359,27 +704,35 @@ class SessionPool:
             if sess is None:
                 continue
             sess.needs_reset = False
-            sess.rows.append(logits_np[k].copy())  # detach from the batch row
+            if not active[k]:
+                continue                        # starved: rode along masked
+            row = logits_np[k].copy()           # detach from the batch row
+            sess.rows.append(row)
+            if not sess.first_logit_wall:
+                sess.first_logit_wall = time.perf_counter()
+            if self.stream_partials:
+                self._partials.append(PartialLogits(
+                    req_id=sess.req_id, t0=sess.cursor, rows=row[None]))
             sess.cursor += 1
-            if sess.cursor >= sess.request.n_frames:
-                finished.append(RequestResult(
-                    req_id=sess.request.req_id,
-                    arrival_step=sess.request.arrival_step,
-                    admit_step=sess.admit_step,
-                    finish_step=now,
-                    logits=np.stack(sess.rows),
-                    wall_latency_s=time.perf_counter() - sess.arrival_wall,
-                ))
-                self._slots[k] = None
+            sess.last_step = now
+            if sess.done:
+                finished.append(sess.result(np.stack(sess.rows)))
+                self._free(k)
         return finished
+
+    def _free(self, k: int) -> None:
+        sess = self._slots[k]
+        if sess is not None:
+            del self._by_req[sess.req_id]
+        self._slots[k] = None
 
     # -- chunked tick loop ---------------------------------------------------
 
     def max_chunk_advance(self) -> int:
         """Ticks the next ``step_chunk`` will consume: min(chunk_frames,
-        longest remaining utterance).  0 when no session is active."""
-        rem = [s.request.n_frames - s.cursor
-               for s in self._slots if s is not None]
+        most unconsumed frames any session holds).  0 when every session
+        is starved (or none is active)."""
+        rem = [s.available for s in self._slots if s is not None]
         return min(self.chunk_frames, max(rem)) if rem else 0
 
     def _chunk_len(self) -> int:
@@ -400,15 +753,22 @@ class SessionPool:
         the device finishes).  Sessions finishing in THIS chunk have their
         output-buffer rows sliced off device-side now — before the next
         dispatch donates the buffer away — and surface on the next
-        ``step_chunk``/``flush`` call.  Call ``flush()`` after the last
-        chunk to collect the tail."""
+        ``step_chunk``/``flush`` call.  With ``stream_partials`` every
+        advancing session's chunk rows are snapshotted and surface as
+        ``PartialLogits`` (``take_partials``) on the same one-chunk-later
+        cadence.  Call ``flush()`` after the last chunk to collect the
+        tail."""
         if not self.chunk_frames:
             raise RuntimeError(
                 "this pool was built with chunk_frames=0; use step()")
+        self._reap_cancelled()
+        self._queue_done_retirements()
         active, reset = self._masks()
         if not active.any():
             return self.flush()
         n = self._chunk_len()
+        starts = np.array([0 if s is None else s.cursor
+                           for s in self._slots], np.int32)
         self._flush_uploads()
 
         t0 = time.perf_counter()
@@ -421,30 +781,43 @@ class SessionPool:
         # ---- everything below overlaps the in-flight device chunk ----
         retiring: List[_Session] = []
         slots: List[int] = []
-        finish_steps: List[int] = []
+        partial_entries: List[Tuple[_Session, int, int, int]] = []
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
             sess.needs_reset = False
-            adv = min(self.chunk_frames, sess.request.n_frames - sess.cursor)
+            adv = min(n, sess.available)
+            if adv <= 0:
+                continue
             sess.cursor += adv
-            if sess.cursor >= sess.request.n_frames:
+            sess.last_step = now + adv - 1
+            if self.stream_partials:
+                partial_entries.append((sess, k, int(starts[k]), adv))
+            if sess.done:
                 retiring.append(sess)
                 slots.append(k)
-                finish_steps.append(now + adv - 1)
-                self._slots[k] = None
-        newly = None
+                self._free(k)
+        newly: List[_PendingChunk] = []
+        newly_partials: List[_PendingPartials] = []
         if retiring:
             # snapshot the output buffer NOW, in one device op: it is
             # dispatched against this chunk's output before the next
             # step_chunk donates it, detaching the rows device-side; the
             # one-copy host fetch waits one more chunk.
-            newly = _PendingChunk(sessions=retiring, slots=slots,
-                                  finish_steps=finish_steps,
-                                  rows=_snapshot(self._out))
-        finished = self._resolve_pending()   # syncs on the PREVIOUS chunk
+            newly.append(_PendingChunk(
+                sessions=retiring, slots=slots,
+                rows=self.engine.snapshot_out(self._out)))
+        if partial_entries:
+            # likewise for the streamed chunk rows — but only this chunk's
+            # [B, n, n_classes] window, not the whole buffer:
+            newly_partials.append(_PendingPartials(
+                entries=partial_entries,
+                rows=self.engine.snapshot_chunk(self._out, starts,
+                                                n_frames=n)))
+        finished = self._resolve()           # syncs on the PREVIOUS chunk
         t_end = time.perf_counter()
-        self._pending = newly
+        self._pending.extend(newly)
+        self._pending_partials.extend(newly_partials)
 
         wall = t_end - t0
         if wall > 0:
@@ -455,26 +828,90 @@ class SessionPool:
             self._overlap_fracs.append((t_end - t_dispatched) / wall)
         return finished
 
+    def _queue_done_retirements(self) -> None:
+        """Retire sessions that are already done WITHOUT another dispatch
+        (a stream finished after its last received frame was consumed, or
+        finished with zero frames): snapshot their banked rows now; the
+        results surface at the next resolve like any other retirement."""
+        retiring: List[_Session] = []
+        slots: List[int] = []
+        for k, sess in enumerate(self._slots):
+            if sess is not None and sess.done:
+                retiring.append(sess)
+                slots.append(k)
+                self._free(k)
+        if retiring:
+            self._pending.append(_PendingChunk(
+                sessions=retiring, slots=slots,
+                rows=self.engine.snapshot_out(self._out)))
+
     def flush(self) -> List[RequestResult]:
-        """Resolve retirements still pending from the last dispatched
-        chunk (the double-buffer tail)."""
+        """Resolve retirements (and streamed partials) still pending from
+        the last dispatched chunk (the double-buffer tail)."""
+        if self.chunk_frames:
+            self._reap_cancelled()
+            self._queue_done_retirements()
+        return self._resolve()
+
+    def tick(self, now: int) -> Tuple[List[RequestResult], int]:
+        """Non-blocking driver entry: at most one dispatch, in either mode.
+
+        Returns ``(finished_results, frames_advanced)``.  Safe to call
+        with nothing to do (returns ``([], 0)``); handles cancellations,
+        dispatch-free retirements and the double-buffer tail.  The call
+        does not wait for the device — the only host sync is the previous
+        chunk's one-copy logits fetch (per-frame mode syncs on its own
+        logits, as always)."""
+        if self.chunk_frames:
+            adv = self.max_chunk_advance()
+            if adv:
+                return self.step_chunk(now), adv
+            return self.flush(), 0
+        self._reap_cancelled()
+        finished: List[RequestResult] = []
+        # dispatch-free retirements (finished streams with nothing left):
+        for k, sess in enumerate(self._slots):
+            if sess is not None and sess.done:
+                finished.append(sess.result(
+                    np.stack(sess.rows) if sess.rows else np.zeros(
+                        (0, self.engine.n_classes), np.float32)))
+                self._free(k)
+        active, _ = self._masks()
+        if active.any():
+            return finished + self.step(now), 1
+        return finished, 0
+
+    def take_partials(self) -> List[PartialLogits]:
+        """Drain the streamed per-chunk logits resolved so far (in frame
+        order per session; ``stream_partials`` only)."""
+        out, self._partials = self._partials, []
+        return out
+
+    def _resolve(self) -> List[RequestResult]:
+        self._resolve_partials()
         return self._resolve_pending()
 
+    def _resolve_partials(self) -> None:
+        if not self._pending_partials:
+            return
+        pend, self._pending_partials = self._pending_partials, []
+        for p in pend:
+            rows = np.asarray(p.rows)          # ONE fetch per chunk
+            for sess, k, t0, adv in p.entries:
+                if not sess.first_logit_wall:
+                    sess.first_logit_wall = time.perf_counter()
+                self._partials.append(PartialLogits(
+                    req_id=sess.req_id, t0=t0, rows=rows[k, :adv].copy()))
+
     def _resolve_pending(self) -> List[RequestResult]:
-        if self._pending is None:
+        if not self._pending:
             return []
-        p, self._pending = self._pending, None
-        rows = np.asarray(p.rows)              # ONE fetch for all retirees
+        pend, self._pending = self._pending, []
         out: List[RequestResult] = []
-        for sess, k, fin in zip(p.sessions, p.slots, p.finish_steps):
-            out.append(RequestResult(
-                req_id=sess.request.req_id,
-                arrival_step=sess.request.arrival_step,
-                admit_step=sess.admit_step,
-                finish_step=fin,
-                logits=rows[k, :sess.request.n_frames].copy(),
-                wall_latency_s=time.perf_counter() - sess.arrival_wall,
-            ))
+        for p in pend:
+            rows = np.asarray(p.rows)          # ONE fetch for all retirees
+            for sess, k in zip(p.sessions, p.slots):
+                out.append(sess.result(rows[k, :sess.cursor].copy()))
         return out
 
     def mean_host_overlap_frac(self) -> float:
@@ -491,7 +928,9 @@ class SessionPool:
         truncation granularity is the chunk."""
         n_classes = self.engine.n_classes
         self._staged.clear()    # evicted sessions' uploads must not land
-        out: List[RequestResult] = self._resolve_pending()
+        self._staged_appends.clear()
+        self._reap_cancelled()
+        out: List[RequestResult] = self._resolve()
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
@@ -502,16 +941,9 @@ class SessionPool:
             else:
                 logits = (np.stack(sess.rows) if sess.rows
                           else np.zeros((0, n_classes), np.float32))
-            out.append(RequestResult(
-                req_id=sess.request.req_id,
-                arrival_step=sess.request.arrival_step,
-                admit_step=sess.admit_step,
-                finish_step=now,
-                logits=logits,
-                wall_latency_s=time.perf_counter() - sess.arrival_wall,
-                truncated=True,
-            ))
-            self._slots[k] = None
+            out.append(sess.result(logits, truncated=not sess.done,
+                                   finish_step=now))
+            self._free(k)
         return out
 
     def measured_sparsity(self) -> Dict[str, float]:
@@ -569,8 +1001,9 @@ def serve_requests(
     # pre-size the device frame buffers to the longest utterance so no
     # mid-run bucket growth (= recompile) can happen:
     max_frames = max((r.n_frames for r in pending), default=1)
-    pool = SessionPool(engine, capacity, max_frames=max_frames,
-                       chunk_frames=chunk_frames)
+    pool = SessionPool(
+        engine, capacity, max_frames=max_frames, chunk_frames=chunk_frames,
+        max_buffer_frames=max(max_frames, DEFAULT_MAX_BUFFER_FRAMES))
     waiting: deque[Tuple[StreamRequest, float]] = deque()
     results: List[RequestResult] = []
     now = 0
@@ -609,25 +1042,16 @@ def serve_requests(
 
     wall = time.perf_counter() - t0
     results.sort(key=lambda r: r.req_id)
-    lat = np.array([r.wall_latency_s for r in results], np.float64)
-    tas = np.array([r.turnaround_steps for r in results], np.float64)
-    frames = int(sum(r.logits.shape[0] for r in results))
-    stats = ServeStats(
+    stats = aggregate_stats(
+        results,
         capacity=capacity,
         n_requests=n_requests,
-        total_frames=frames,
         total_steps=total_steps,
         wall_s=wall,
-        frames_per_s=frames / wall if wall > 0 else float("inf"),
-        p50_latency_s=float(np.percentile(lat, 50)) if len(lat) else 0.0,
-        p95_latency_s=float(np.percentile(lat, 95)) if len(lat) else 0.0,
-        p50_turnaround_steps=float(np.percentile(tas, 50)) if len(tas) else 0.0,
-        p95_turnaround_steps=float(np.percentile(tas, 95)) if len(tas) else 0.0,
         sparsity=pool.measured_sparsity(),
         truncated=truncated,
         chunk_frames=chunk_frames,
         n_dispatches=pool.n_dispatches,
-        dispatches_per_frame=pool.n_dispatches / frames if frames else 0.0,
         host_overlap_frac=pool.mean_host_overlap_frac(),
     )
     return results, stats

@@ -1,4 +1,5 @@
-"""Device-resident sparsity telemetry for the serving pool.
+"""Device-resident sparsity telemetry + latency summaries for the serving
+pool and the asyncio front-end.
 
 The batch-1 `SpartusEngine` appends a Python dict per (step, layer) with
 `int()` host syncs on every frame — fine for one utterance, fatal for a
@@ -19,6 +20,11 @@ statistics the batch-1 engine reports:
 Because the per-layer column count is static, the mean-of-ratios reduces
 exactly to sums:  mean(nnz/cols) = (sum_l nnz_sum_l / n_cols_l) / sum_l steps_l,
 so the aggregate numbers equal what the per-step dict path would report.
+
+``percentile_summary`` is the shared latency reduction: every serving
+surface (sync `serve_requests`, the async front-end, the load benchmark)
+reports wall latency, queue wait and time-to-first-logit through it so
+p50/p95/p99 mean the same thing everywhere.
 """
 from __future__ import annotations
 
@@ -91,6 +97,17 @@ def accumulate_layers(
             (dropped > 0).astype(jnp.int32) * act, axis=-1).astype(f32),
         steps=tel.steps + jnp.sum(act).astype(f32),
     )
+
+
+def percentile_summary(
+    values: Sequence[float], name: str, qs: Sequence[int] = (50, 95, 99),
+) -> Dict[str, float]:
+    """Reduce a latency sample list to ``{"p<q>_<name>": value}`` entries
+    (0.0 for an empty sample, so stats stay well-formed on empty runs)."""
+    arr = np.asarray(list(values), np.float64)
+    if arr.size == 0:
+        return {f"p{q}_{name}": 0.0 for q in qs}
+    return {f"p{q}_{name}": float(np.percentile(arr, q)) for q in qs}
 
 
 def measured_sparsity(

@@ -1,0 +1,351 @@
+"""Asyncio streaming front-end (serving/async_server.py).
+
+The async server is pinned against the synchronous `serve_requests`
+oracle: per-chunk streamed partial logits concatenate to exactly the
+logits the drain loop produces (1e-5) over a (capacity, chunk_frames,
+ragged-length) grid, including mid-stream admission, cancellation
+mid-utterance, and backpressure when admissions exceed capacity.
+"""
+import asyncio
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lstm_am
+from repro.serving import (
+    AsyncSpartusServer,
+    BatchedSpartusEngine,
+    EngineConfig,
+    SpartusEngine,
+    StreamClosed,
+    StreamRequest,
+    serve_requests,
+)
+
+INPUT_DIM, HIDDEN, CLASSES = 20, 32, 11
+GAMMA, M, THETA = 0.75, 4, 0.05
+LENS = [5, 9, 3, 12, 1, 7]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = lstm_am.LSTMAMConfig(input_dim=INPUT_DIM, hidden_dim=HIDDEN,
+                               n_layers=2, n_classes=CLASSES)
+    params = lstm_am.init_params(jax.random.key(0), cfg)
+    return lstm_am.cbtd_prune_stacks(params, gamma=GAMMA, m=M), cfg
+
+
+@pytest.fixture(scope="module")
+def engines(model):
+    params, cfg = model
+    ecfg = EngineConfig(theta=THETA, gamma=GAMMA, m=M, capacity_frac=1.0)
+    return (SpartusEngine(params, cfg, ecfg),
+            BatchedSpartusEngine(params, cfg, ecfg))
+
+
+def _utterance(key, t):
+    return np.asarray(
+        jax.random.normal(jax.random.key(key), (t, INPUT_DIM)), np.float32)
+
+
+@pytest.fixture(scope="module")
+def workload(engines):
+    e1, _ = engines
+    feats = [_utterance(300 + i, t) for i, t in enumerate(LENS)]
+    refs = [np.asarray(e1.run_utterance(jnp.asarray(f))) for f in feats]
+    return feats, refs
+
+
+async def _stream_client(server, feats, rng, slice_hi=4):
+    """Feed an utterance in random 1..slice_hi-frame blocks, yielding the
+    loop between sends (mid-chunk arrival), and collect every partial."""
+    handle = await server.stream(want_partials=True)
+    j = 0
+    while j < len(feats):
+        n = int(rng.integers(1, slice_hi))
+        await handle.send(feats[j:j + n])
+        j += n
+        await asyncio.sleep(0)
+    handle.close()
+    parts = [p async for p in handle]
+    result = await handle.result()
+    return parts, result
+
+
+def test_async_streamed_parity_grid(engines, workload):
+    """Streamed-per-chunk logits == final result == serve_requests output
+    at 1e-5 over (capacity, chunk_frames) with ragged lengths; partials
+    arrive in frame order and concatenate to the full utterance."""
+    _, eb = engines
+    feats, refs = workload
+    reqs = [StreamRequest(i, 0, feats[i]) for i in range(len(feats))]
+
+    for capacity, chunk in ((2, 4), (4, 8), (3, 1)):
+        sync_results, _ = serve_requests(eb, reqs, capacity=capacity,
+                                         chunk_frames=chunk)
+
+        async def run():
+            async with AsyncSpartusServer(
+                    eb, capacity, chunk_frames=chunk, max_frames=16,
+                    offload_ticks=False) as srv:
+                rngs = [np.random.default_rng(7 * i + capacity)
+                        for i in range(len(feats))]
+                return await asyncio.gather(*[
+                    _stream_client(srv, feats[i], rngs[i])
+                    for i in range(len(feats))])
+
+        out = asyncio.run(run())
+        for i, (parts, result) in enumerate(out):
+            assert [p.t0 for p in parts] == sorted(p.t0 for p in parts)
+            streamed = np.concatenate([p.rows for p in parts])
+            assert streamed.shape[0] == LENS[i]
+            np.testing.assert_allclose(streamed, refs[i], atol=1e-5)
+            np.testing.assert_allclose(result.logits, refs[i], atol=1e-5)
+            np.testing.assert_allclose(
+                result.logits, sync_results[i].logits, atol=1e-5)
+
+
+def test_async_submit_matches_oracle(engines, workload):
+    """Whole-utterance submit (no partial streaming) returns the oracle
+    logits, and TTFL/queue-wait stats are populated and consistent."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            results = await asyncio.gather(
+                *[srv.submit(feats[i]) for i in range(len(feats))])
+            return results, srv.stats()
+
+    results, stats = asyncio.run(run())
+    for i, r in enumerate(results):
+        np.testing.assert_allclose(r.logits, refs[i], atol=1e-5)
+        assert 0 <= r.queue_wait_s <= r.wall_latency_s + 1e-9
+        assert 0 < r.ttfl_s <= r.wall_latency_s + 1e-9
+    assert stats.n_requests == len(feats)
+    assert stats.total_frames == sum(LENS)
+    assert stats.p50_ttfl_s > 0
+    assert stats.p99_latency_s >= stats.p50_latency_s
+
+
+def test_async_mid_stream_admission(engines, workload):
+    """A client admitted while another is mid-utterance: the first is
+    still streaming (not finished) at the second's admission, and both
+    produce oracle logits."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=2,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            h1 = await srv.stream(want_partials=True)
+            await h1.send(feats[3][:2])          # 12-frame utterance, drip-fed
+            # wait until the first client's logits start streaming back:
+            first = await h1.__anext__()
+            assert first.t0 == 0
+            # now admit a second client mid-utterance-1:
+            h2 = await srv.stream(feats[0], want_partials=False)
+            h2.close()
+            await h2.admitted.wait()
+            assert srv.n_connected == 2          # 1 still open while 2 admitted
+            # finish feeding client 1:
+            await h1.send(feats[3][2:])
+            h1.close()
+            parts = [first] + [p async for p in h1]
+            r1 = await h1.result()
+            r2 = await h2.result()
+            return parts, r1, r2
+
+    parts, r1, r2 = asyncio.run(run())
+    np.testing.assert_allclose(
+        np.concatenate([p.rows for p in parts]), refs[3], atol=1e-5)
+    np.testing.assert_allclose(r1.logits, refs[3], atol=1e-5)
+    np.testing.assert_allclose(r2.logits, refs[0], atol=1e-5)
+
+
+def test_async_cancellation_mid_utterance(engines, workload):
+    """Cancelling a stream mid-utterance frees its slot (a queued client
+    gets admitted and completes), result() raises CancelledError, sending
+    after cancel raises StreamClosed, and the neighbour session's logits
+    are unaffected."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=1, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            victim = await srv.stream(feats[1][:4], want_partials=True)
+            await victim.admitted.wait()
+            survivor_task = asyncio.create_task(srv.submit(feats[2]))
+            await asyncio.sleep(0.01)
+            assert not survivor_task.done()      # pool full: it queues
+            victim.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await victim.result()
+            with pytest.raises(StreamClosed):
+                await victim.send(feats[1][4:6])
+            survivor = await survivor_task      # admitted into the freed slot
+            return survivor
+
+    survivor = asyncio.run(run())
+    np.testing.assert_allclose(survivor.logits, refs[2], atol=1e-5)
+
+
+def test_async_backpressure_bounds_admission_queue(engines, workload):
+    """max_pending bounds the admission queue: with capacity 1 and
+    max_pending 1, a third concurrent stream() call cannot return until a
+    slot frees; every client still completes with oracle logits, and the
+    later arrivals record positive queue wait."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=1, chunk_frames=4,
+                                      max_frames=16, max_pending=1,
+                                      offload_ticks=False) as srv:
+            h1 = await srv.stream(feats[0])      # takes the slot and HOLDS
+            await h1.admitted.wait()             # it (stream left open)
+            h2 = await srv.stream(feats[2])      # fills the admission queue
+            h2.close()
+            opened3 = asyncio.Event()
+
+            async def third():
+                h3 = await srv.stream(feats[4])  # must WAIT: queue is full
+                opened3.set()
+                h3.close()
+                return await h3.result()
+
+            t3 = asyncio.create_task(third())
+            await asyncio.sleep(0.02)
+            assert not opened3.is_set()          # blocked on backpressure
+            h1.close()                           # slot frees -> h2 admitted
+            r1 = await h1.result()
+            r2 = await h2.result()
+            r3 = await t3
+            assert opened3.is_set()
+            return r1, r2, r3
+
+    r1, r2, r3 = asyncio.run(run())
+    np.testing.assert_allclose(r1.logits, refs[0], atol=1e-5)
+    np.testing.assert_allclose(r2.logits, refs[2], atol=1e-5)
+    np.testing.assert_allclose(r3.logits, refs[4], atol=1e-5)
+    assert r3.queue_wait_s > 0
+    assert r3.queue_wait_s <= r3.wall_latency_s + 1e-9
+
+
+def test_async_submit_stream_iterator(engines, workload):
+    """The AsyncIterator feeding path (submit_stream) drives a session to
+    the same logits."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def blocks(f):
+        for j in range(0, len(f), 3):
+            yield f[j:j + 3]
+            await asyncio.sleep(0)
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            handles = [await srv.submit_stream(blocks(feats[i]))
+                       for i in (1, 5)]
+            return await asyncio.gather(*[h.result() for h in handles])
+
+    r1, r5 = asyncio.run(run())
+    np.testing.assert_allclose(r1.logits, refs[1], atol=1e-5)
+    np.testing.assert_allclose(r5.logits, refs[5], atol=1e-5)
+
+
+def test_async_offloaded_ticks_parity(engines, workload):
+    """offload_ticks=True (device sync in a worker thread) produces the
+    same logits — the default serving configuration."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=True) as srv:
+            return await asyncio.gather(
+                *[srv.submit(feats[i]) for i in range(4)])
+
+    results = asyncio.run(run())
+    for i, r in enumerate(results):
+        np.testing.assert_allclose(r.logits, refs[i], atol=1e-5)
+
+
+def test_async_bad_request_fails_only_itself(engines, workload):
+    """A malformed request (wrong feature dim, or an utterance past the
+    growth limit) is a per-request error: the offending client's call or
+    result raises, the driver stays up, and other clients complete."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=4,
+                                      max_frames=16, max_buffer_frames=32,
+                                      offload_ticks=False) as srv:
+            with pytest.raises(ValueError, match="feature dim"):
+                await srv.submit(np.zeros((4, INPUT_DIM + 3), np.float32))
+            with pytest.raises(ValueError, match="growth limit"):
+                await srv.submit(np.zeros((100, INPUT_DIM), np.float32))
+            h = await srv.stream(feats[0][:2])
+            with pytest.raises(ValueError, match="feature dim"):
+                await h.send(np.zeros((2, 5), np.float32))
+            h.cancel()
+            # the server survived all of it and still serves:
+            return await srv.submit(feats[2])
+
+    survivor = asyncio.run(run())
+    np.testing.assert_allclose(survivor.logits, refs[2], atol=1e-5)
+    assert survivor.logits.shape[0] == LENS[2]
+
+
+def test_async_stats_total_steps_counts_dispatching_ticks(engines, workload):
+    """ServeStats.total_steps from the async server counts frames
+    advanced by dispatching ticks only — flush-only iterations (the
+    double-buffer tail) must not inflate it (same invariant as the sync
+    driver)."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=2, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            await asyncio.gather(srv.submit(feats[0]), srv.submit(feats[2]))
+            return srv.stats()
+
+    stats = asyncio.run(run())
+    # 5- and 3-frame utterances, capacity 2: the longest session bounds
+    # the dispatched frame count; flush ticks add nothing.
+    assert stats.total_frames == LENS[0] + LENS[2]
+    assert stats.total_steps == max(LENS[0], LENS[2])
+
+
+def test_async_wall_clock_pacing(engines, workload):
+    """target_chunk_ms paces chunk boundaries: serving a 12-frame
+    utterance in 4-frame chunks at 30 ms/chunk takes >= 2 pacing sleeps
+    (the last chunk doesn't wait), and still matches the oracle."""
+    _, eb = engines
+    feats, refs = workload
+    import time
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=1, chunk_frames=4,
+                                      max_frames=16, target_chunk_ms=30.0,
+                                      offload_ticks=False) as srv:
+            t0 = time.perf_counter()
+            r = await srv.submit(feats[3])       # 12 frames = 3 chunks
+            return r, time.perf_counter() - t0
+
+    r, wall = asyncio.run(run())
+    np.testing.assert_allclose(r.logits, refs[3], atol=1e-5)
+    assert wall >= 0.06                          # >= 2 full chunk periods

@@ -258,6 +258,76 @@ def test_total_steps_counts_only_dispatching_ticks(engines):
     assert pool.n_active == 0
 
 
+def test_admit_rejects_utterance_past_growth_limit(engines):
+    """Satellite fix: an utterance longer than the frame-buffer growth
+    limit is rejected at admission with a clear error — not silently
+    truncated at some later chunk boundary.  The pool stays usable."""
+    from repro.serving.scheduler import SessionPool
+    _, eb = engines
+    pool = SessionPool(eb, capacity=2, max_frames=16, chunk_frames=4,
+                       max_buffer_frames=64)
+    with pytest.raises(ValueError, match="growth limit"):
+        pool.admit(StreamRequest(0, 0, _utterance(400, 100)), 0)
+    assert pool.n_active == 0                    # nothing half-admitted
+    # a fitting request still admits and serves normally:
+    assert pool.admit(StreamRequest(1, 0, _utterance(401, 10)), 0)
+    results, now = [], 0
+    while len(results) < 1:
+        fin, adv = pool.tick(now)
+        results += fin
+        now += max(adv, 1)
+    assert results[0].req_id == 1 and results[0].logits.shape[0] == 10
+
+    # pre-sizing beyond the limit is a configuration error, caught early:
+    with pytest.raises(ValueError, match="max_buffer_frames"):
+        SessionPool(eb, capacity=1, max_frames=128, max_buffer_frames=64)
+
+
+def test_append_rejects_frames_past_growth_limit(engines):
+    """Incremental admission enforces the same ceiling: an append that
+    would push a stream past max_buffer_frames raises, and the already-
+    received frames still serve to completion."""
+    from repro.serving.scheduler import SessionPool
+    _, eb = engines
+    pool = SessionPool(eb, capacity=1, max_frames=16, chunk_frames=4,
+                       max_buffer_frames=32)
+    feats = _utterance(410, 30)
+    assert pool.admit_stream(5, 0, feats=feats)
+    with pytest.raises(ValueError, match="growth limit"):
+        pool.append_frames(5, _utterance(411, 8))
+    pool.finish_stream(5)                        # the 30 frames stand
+    results, now = [], 0
+    while len(results) < 1:
+        fin, adv = pool.tick(now)
+        results += fin
+        now += max(adv, 1)
+    assert results[0].logits.shape[0] == 30
+
+
+def test_incremental_admission_matches_full_admission(engines):
+    """admit_stream + append_frames + finish_stream produces the same
+    logits as admitting the complete utterance (per-frame AND chunked) —
+    the contract the async front-end is built on."""
+    e1, eb = engines
+    feats = _utterance(420, 11)
+    ref = np.asarray(e1.run_utterance(jnp.asarray(feats)))
+    from repro.serving.scheduler import SessionPool
+    for chunk in (0, 4):
+        pool = SessionPool(eb, capacity=2, max_frames=16, chunk_frames=chunk)
+        assert pool.admit_stream(0, 0, feats=feats[:3])
+        results, now, fed = [], 0, 3
+        while len(results) < 1:
+            if fed < 11:
+                pool.append_frames(0, feats[fed:fed + 4])
+                fed += 4
+                if fed >= 11:
+                    pool.finish_stream(0)
+            fin, adv = pool.tick(now)
+            results += fin
+            now += max(adv, 1)
+        np.testing.assert_allclose(results[0].logits, ref, atol=1e-5)
+
+
 def test_spmv_path_selection_parity(model):
     """Forcing the scatter path and the dense-mirror path over the same
     packed weights must agree (batch-1 and pooled)."""

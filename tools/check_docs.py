@@ -1,0 +1,165 @@
+"""Documentation checker: executable snippets + intra-repo links.
+
+Keeps the docs honest as the code moves:
+
+* every fenced ```python block in ``docs/*.md`` and ``README.md`` is
+  compiled and **executed** (with ``src/`` importable), so a renamed
+  function or changed signature breaks CI instead of silently rotting in
+  prose.  A block preceded (within two lines) by an HTML comment
+  containing ``doccheck: skip`` is exempt — use it for illustrative
+  fragments that are not self-contained;
+* every relative markdown link ``[text](path)`` / ``[text](path#anchor)``
+  must resolve to an existing file, and same-file ``#anchor`` links to an
+  existing heading (GitHub slug rules, simplified).
+
+Exit code 0 = clean.  Run directly::
+
+    PYTHONPATH=src python tools/check_docs.py
+
+or via the tier-1 suite (tests/test_docs.py imports `check_repo`).
+"""
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+from typing import List, Tuple
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — skip images ![..](..) and external/absolute schemes:
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_MARK = "doccheck: skip"
+
+
+def doc_files(root: Path) -> List[Path]:
+    docs = sorted((root / "docs").glob("*.md")) if (root / "docs").is_dir() \
+        else []
+    readme = root / "README.md"
+    return ([readme] if readme.is_file() else []) + docs
+
+
+def extract_python_blocks(text: str) -> List[Tuple[int, str]]:
+    """(start_line, source) for each executable ```python block."""
+    lines = text.splitlines()
+    blocks: List[Tuple[int, str]] = []
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            skip = any(SKIP_MARK in lines[j]
+                       for j in range(max(0, i - 2), i))
+            body: List[str] = []
+            i += 1
+            start = i + 1          # 1-based first body line
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if not skip:
+                blocks.append((start, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def extract_links(text: str) -> List[Tuple[int, str]]:
+    out: List[Tuple[int, str]] = []
+    in_fence = False
+    for n, line in enumerate(text.splitlines(), 1):
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            out.append((n, m.group(1)))
+    return out
+
+
+def heading_slugs(text: str) -> set:
+    """GitHub-style slugs of every markdown heading (simplified: lower-
+    case, alphanumerics and hyphens, spaces -> hyphens)."""
+    slugs = set()
+    in_fence = False
+    for line in text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        title = line.lstrip("#").strip()
+        slug = re.sub(r"[^\w\- ]", "", title.lower()).replace(" ", "-")
+        slugs.add(slug)
+    return slugs
+
+
+def check_links(path: Path, root: Path) -> List[str]:
+    text = path.read_text()
+    problems = []
+    for line, target in extract_links(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = (path.parent / file_part).resolve()
+            if not dest.exists():
+                problems.append(f"{path.relative_to(root)}:{line}: broken "
+                                f"link target {target!r}")
+                continue
+            dest_text = dest.read_text() if dest.suffix == ".md" else ""
+        else:
+            dest_text = text
+        if anchor and dest_text:
+            if anchor.lower() not in heading_slugs(dest_text):
+                problems.append(f"{path.relative_to(root)}:{line}: broken "
+                                f"anchor {target!r}")
+    return problems
+
+
+def check_snippets(path: Path, root: Path) -> List[str]:
+    problems = []
+    for start, src in extract_python_blocks(path.read_text()):
+        where = f"{path.relative_to(root)}:{start}"
+        try:
+            code = compile(src, f"<{where}>", "exec")
+        except SyntaxError as e:
+            problems.append(f"{where}: snippet does not compile: {e}")
+            continue
+        try:
+            exec(code, {"__name__": f"doccheck_{path.stem}"})
+        except Exception:
+            tb = traceback.format_exc(limit=2).strip().splitlines()[-1]
+            problems.append(f"{where}: snippet failed to run: {tb}")
+    return problems
+
+
+def check_repo(root: Path) -> List[str]:
+    """All documentation problems in the repo (empty list = clean)."""
+    src = root / "src"
+    if str(src) not in sys.path:
+        sys.path.insert(0, str(src))
+    problems: List[str] = []
+    for path in doc_files(root):
+        problems += check_links(path, root)
+        problems += check_snippets(path, root)
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    problems = check_repo(root)
+    files = doc_files(root)
+    n_snippets = sum(len(extract_python_blocks(p.read_text()))
+                     for p in files)
+    n_links = sum(len(extract_links(p.read_text())) for p in files)
+    if problems:
+        print(f"[docs] {len(problems)} problem(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"[docs] OK: {len(files)} files, {n_snippets} executable "
+          f"snippets ran, {n_links} links checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
