@@ -39,6 +39,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import os
 import sys
 import time
 from typing import List
@@ -309,6 +310,67 @@ def bench_async_load(hidden: int, layers: int, input_dim: int, classes: int,
     return report, parity_ok
 
 
+def bench_sharded(layers: int, input_dim: int, classes: int, frames: int,
+                  theta: float, gamma: float, capacity_frac: float,
+                  hidden: int, cap: int, chunk: int, grid=(1, 2, 4)):
+    """Slot-sharded pool scaling: the same request burst through
+    ``SessionPool(n_devices=n)`` for each n in ``grid``, logits pinned
+    against the shard_1 run at 1e-5, frames/s per row.
+
+    Runs on emulated host devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``): the SPMD
+    partitioning, placement and admission paths are identical to real
+    multi-device, and because the sharded steady state contains zero
+    cross-device communication, per-device wall time shrinks with the
+    shard count — bounded by physical cores, since the emulated devices
+    share them.  Rows a machine cannot host (n > visible devices) are
+    recorded as skipped.  Returns (report dict, parity_ok,
+    shard4_speedup or None)."""
+    params, cfg = build_model(hidden, layers, input_dim, classes, gamma, m=16)
+    ecfg = EngineConfig(theta=theta, gamma=gamma, m=16,
+                        capacity_frac=capacity_frac)
+    eb = BatchedSpartusEngine(params, cfg, ecfg)
+    reqs = make_requests(cap, frames, input_dim)   # one request per slot
+    report = {"hidden": hidden, "m": 16, "capacity": cap,
+              "chunk_frames": chunk, "n_cpus": os.cpu_count(),
+              "n_devices_visible": jax.device_count()}
+    parity_ok = True
+    base_results = None
+    fps = {}
+    for n_dev in grid:
+        if n_dev > jax.device_count():
+            print(f"[bench] shard_{n_dev}: skipped "
+                  f"({jax.device_count()} device(s) visible; set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=8)")
+            report[f"shard_{n_dev}"] = {
+                "skipped": f"needs {n_dev} devices, "
+                           f"{jax.device_count()} visible"}
+            continue
+        # warm: compiles the sharded step/upload/snapshot for this mesh
+        serve_requests(eb, [StreamRequest(i, 0, reqs[0].feats)
+                            for i in range(cap)], cap, chunk_frames=chunk,
+                       n_devices=n_dev)
+        results, stats = serve_requests(eb, reqs, capacity=cap,
+                                        chunk_frames=chunk, n_devices=n_dev)
+        if base_results is None:
+            base_results = results
+        for r in results:
+            if not np.allclose(r.logits, base_results[r.req_id].logits,
+                               atol=1e-5):
+                parity_ok = False
+                print(f"[bench] SHARD PARITY FAIL req {r.req_id} at "
+                      f"n_devices {n_dev}")
+        fps[n_dev] = stats.frames_per_s
+        speedup = stats.frames_per_s / fps[min(fps)]
+        report[f"shard_{n_dev}"] = dict(stats.to_dict(), n_devices=n_dev,
+                                        speedup_vs_shard_1=speedup)
+        print(f"[bench] shard_{n_dev}: {stats.frames_per_s:8.0f} frames/s "
+              f"({speedup:4.2f}x shard_1)")
+    shard4 = (fps[4] / fps[1]) if (1 in fps and 4 in fps) else None
+    report["shard4_speedup"] = shard4
+    return report, parity_ok, shard4
+
+
 # sweep legs: (hidden, spmv_path).  The auto legs pin the dense-mirror route
 # (every gated config has S*(1-gamma) >= 1); the forced-scatter leg pins the
 # scatter kernels, which auto would otherwise never exercise here.
@@ -329,7 +391,41 @@ SWEEP_CHUNK_GRID = (1, 8, 32)
 # closer to 1x as per-chunk device time grows.  The floor is set low
 # enough that shared-runner noise cannot flake the job:
 ASYNC_LOADS = (0.5, 1.0, 2.0)
-ASYNC_FLOOR = 0.75
+# raised 0.75 -> 0.85 with the batched-wakeup driver (dirty-set pump, one
+# delivery pass per boundary, no per-send event-loop pokes): measured
+# 0.93-1.0x on the 2-core dev box at hidden=128 / 32-frame chunks.
+ASYNC_FLOOR = 0.85
+# sharded leg: slot-dimension data parallelism at the big-model config
+# (hidden=512, a 64-slot pool, 32-frame chunks), shard_{1,2,4} rows.  The
+# scaling gate — shard_4 >= SHARD_FLOOR x shard_1 — is enforced on the
+# emulated-device CI run (the multi-device job), where >= 4 cores back
+# the 4 emulated devices; on smaller hosts the rows are still written
+# but the gate only warns, since emulated devices cannot scale past the
+# physical core count.
+SHARD_HIDDEN = 512
+SHARD_CAP = 64
+SHARD_CHUNK = 32
+SHARD_GRID = (1, 2, 4)
+SHARD_FLOOR = 2.0
+SHARD_MIN_CPUS = 4
+
+
+def _sharded_gate(shard4, parity_ok) -> bool:
+    """PASS/FAIL for the sharded leg: parity always gates; the 2x scaling
+    floor gates only where the hardware can express it (>= SHARD_MIN_CPUS
+    physical cores behind >= 4 emulated devices)."""
+    if not parity_ok:
+        return False
+    if shard4 is None:
+        return True                       # leg skipped: too few devices
+    if (os.cpu_count() or 1) < SHARD_MIN_CPUS:
+        if shard4 < SHARD_FLOOR:
+            print(f"[bench] sharded scaling {shard4:.2f}x below the "
+                  f"{SHARD_FLOOR}x floor, NOT gating: only "
+                  f"{os.cpu_count()} physical core(s) behind the emulated "
+                  f"devices")
+        return True
+    return shard4 >= SHARD_FLOOR
 
 
 def main() -> int:
@@ -360,6 +456,13 @@ def main() -> int:
                          "asyncio front-end: latency vs offered load plus "
                          "sustained-throughput ratio vs the sync chunked "
                          "pool (exit 1 on parity failure)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded-pool leg only: shard_{1,2,4} rows at "
+                         "hidden=512 / capacity=64 / 32-frame chunks, "
+                         "parity-pinned, with the 2x shard_4 scaling gate "
+                         "(run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8; the "
+                         "multi-device CI job does)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--emit-json", metavar="PATH", default=None,
                     help="write the report as JSON (--sweep defaults to "
@@ -367,8 +470,9 @@ def main() -> int:
     args = ap.parse_args()
 
     if args.sweep:
-        if args.check:
-            ap.error("--sweep and --check are mutually exclusive gates")
+        if args.check or args.sharded:
+            ap.error("--sweep already includes the other gates; drop "
+                     "--check/--sharded")
         if args.m != ap.get_default("m") or \
                 args.capacities != ap.get_default("capacities") or \
                 args.chunk_frames != ap.get_default("chunk_frames"):
@@ -428,12 +532,49 @@ def main() -> int:
         ok = ok and aparity and afast
         report[f"async_hidden_{SWEEP_CHUNK_HIDDEN}_chunk_{cmax}"] = dict(
             arep, parity=aparity)
+        # sharded leg: shard_{1,2,4} rows; the 2x gate binds where the
+        # host can express it (multi-device CI job), rows always land:
+        srep, sparity, shard4 = bench_sharded(
+            args.layers, args.input_dim, args.classes, args.frames,
+            args.theta, args.gamma, args.capacity_frac,
+            hidden=SHARD_HIDDEN, cap=SHARD_CAP, chunk=SHARD_CHUNK,
+            grid=SHARD_GRID)
+        sgate = _sharded_gate(shard4, sparity)
+        print(f"[bench] sweep sharded hidden={SHARD_HIDDEN}: parity="
+              f"{'ok' if sparity else 'FAIL'} shard_4="
+              f"{'skipped' if shard4 is None else f'{shard4:.2f}x'} "
+              f"shard_1 (floor {SHARD_FLOOR}x) -> "
+              f"{'PASS' if sgate else 'FAIL'}")
+        ok = ok and sgate
+        report[f"sharded_hidden_{SHARD_HIDDEN}"] = dict(srep, parity=sparity)
         if args.json:
             print(json.dumps(report, indent=2))
         with open(emit, "w") as f:
             json.dump(report, f, indent=2)
         print(f"[bench] wrote {emit}")
         return 0 if ok else 1
+
+    if args.sharded:
+        emit = args.emit_json or "BENCH_serving.json"
+        srep, sparity, shard4 = bench_sharded(
+            args.layers, args.input_dim, args.classes, args.frames,
+            args.theta, args.gamma, args.capacity_frac,
+            hidden=SHARD_HIDDEN, cap=SHARD_CAP, chunk=SHARD_CHUNK,
+            grid=SHARD_GRID)
+        sgate = _sharded_gate(shard4, sparity)
+        print(f"[bench] sharded hidden={SHARD_HIDDEN}: parity="
+              f"{'ok' if sparity else 'FAIL'} shard_4="
+              f"{'skipped' if shard4 is None else f'{shard4:.2f}x'} "
+              f"shard_1 (floor {SHARD_FLOOR}x) -> "
+              f"{'PASS' if sgate else 'FAIL'}")
+        report = {f"sharded_hidden_{SHARD_HIDDEN}": dict(srep,
+                                                         parity=sparity)}
+        if args.json:
+            print(json.dumps(report, indent=2))
+        with open(emit, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[bench] wrote {emit}")
+        return 0 if sgate else 1
 
     if args.async_load:
         chunk = args.chunk_frames or 32

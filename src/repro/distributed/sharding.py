@@ -180,11 +180,22 @@ def param_shardings(params, mesh, cfg: Optional[ArchConfig] = None):
 
 def batch_spec(shape: Tuple[int, ...], mesh) -> P:
     """Shard dim0 (global batch) over (pod, data) when divisible."""
+    return slot_spec(shape, mesh, dim=0)
+
+
+def slot_spec(shape: Tuple[int, ...], mesh, dim: int = 0) -> P:
+    """Slot/batch-dimension data parallelism: shard ``dim`` over the
+    (pod, data) axes when divisible, else replicate — the same
+    never-invalid rule the training specs follow.  The serving pool uses
+    this for every per-slot slab in `PoolState` (layer state and cursors
+    on dim 0, the `[L, B]` telemetry accumulators on dim 1, frame/logits
+    buffers on dim 0), so one rule keeps a whole pool consistently
+    slot-sharded or consistently replicated."""
     dp = data_axes(mesh)
-    ax = _div(shape[0], mesh, *dp)
+    ax = _div(shape[dim], mesh, *dp)
     spec = [None] * len(shape)
     if ax:
-        spec[0] = ax
+        spec[dim] = ax
     return P(*spec)
 
 

@@ -233,9 +233,19 @@ def gather_frames(frames: jax.Array, cursor: jax.Array) -> jax.Array:
     consumed).  Deliberately not jit-wrapped: it is traced inline by the
     serving step/chunk functions — including inside `jax.lax.scan`, where
     the chunked tick loop (batched_engine.step_chunk) calls it once per
-    scan iteration with the carried cursor."""
-    b, t_buf, _ = frames.shape
-    return frames[jnp.arange(b), jnp.minimum(cursor, t_buf - 1)]
+    scan iteration with the carried cursor.
+
+    Implemented as ``take_along_axis`` over the time axis (batch dims
+    aligned) rather than ``frames[arange(B), cursor]``: identical rows,
+    but the aligned-batch form partitions cleanly when the slot dimension
+    is sharded across devices — GSPMD keeps the gather local per shard,
+    where the iota-indexed form inserted an all-gather of the indices
+    plus an all-reduce of the result on EVERY scan iteration (measured on
+    the emulated-device mesh; the sharded pool's zero-communication
+    steady state depends on this)."""
+    t_buf = frames.shape[1]
+    idx = jnp.minimum(cursor, t_buf - 1).astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(frames, idx, axis=1)[:, 0]
 
 
 def bank_rows(

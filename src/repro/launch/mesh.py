@@ -44,6 +44,25 @@ def make_host_mesh(n_data: int = 2, n_model: int = 2):
     return compat_make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_data_mesh(n_data: int = 1):
+    """1-D ``("data",)`` mesh over the first ``n_data`` local devices —
+    the serving pool's slot-dimension data parallelism (each device owns
+    a contiguous block of pool slots; no model axis, the CBCSC weights
+    replicate).  Raises with a clear message when the host exposes fewer
+    devices (CI emulates them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    avail = len(jax.devices())
+    if n_data < 1:
+        raise ValueError(f"n_data must be >= 1, got {n_data}")
+    if n_data > avail:
+        raise ValueError(
+            f"requested a {n_data}-device data mesh but only {avail} "
+            f"device(s) are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_data} (before "
+            f"importing jax) to emulate host devices")
+    return compat_make_mesh((n_data,), ("data",))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)

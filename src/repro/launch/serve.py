@@ -9,6 +9,9 @@ session pool with --pool N, or the asyncio streaming front-end with
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --requests 24
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 \
         --chunk-frames 32    # chunked device tick loop (1 dispatch / 32 frames)
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 \
+        --chunk-frames 32 --devices 4   # slot-sharded pool (2 slots/device)
     PYTHONPATH=src python -m repro.launch.serve --spartus --async --pool 8 \
         --clients 8          # TCP/JSON-lines streaming server + demo clients
     PYTHONPATH=src python -m repro.launch.serve --spartus --async --pool 8 \
@@ -108,8 +111,14 @@ def serve_spartus(args):
                                  np.float32))
             for i in range(n_req)
         ]
+        n_devices = args.devices if args.devices > 0 else None
+        if n_devices:
+            print(f"[serve] sharding the pool's {args.pool} slots over "
+                  f"{n_devices} device(s) (slot-dimension data "
+                  f"parallelism; {len(jax.devices())} visible)")
         results, stats = serve_requests(engine, reqs, capacity=args.pool,
-                                        chunk_frames=args.chunk_frames)
+                                        chunk_frames=args.chunk_frames,
+                                        n_devices=n_devices)
         mode = (f"chunked x{args.chunk_frames}" if args.chunk_frames
                 else "per-frame")
         print(f"[serve] pool({args.pool}, {mode}): {stats.n_requests} "
@@ -269,7 +278,8 @@ def serve_spartus_async(args):
         server = AsyncSpartusServer(
             engine, capacity, chunk_frames=chunk,
             target_chunk_ms=args.target_chunk_ms, max_frames=64,
-            max_pending=4 * capacity)
+            max_pending=4 * capacity,
+            n_devices=args.devices if args.devices > 0 else None)
         async with server:
             tcp = await asyncio.start_server(
                 lambda r, w: handle_conn(server, r, w),
@@ -326,6 +336,11 @@ def main():
     ap.add_argument("--chunk-frames", type=int, default=0,
                     help="--pool mode: frames advanced per device dispatch "
                          "(0 = per-frame ticks; --async defaults to 8)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="--pool/--async: shard the pool's slot dimension "
+                         "over N devices (0 = single-device; emulate with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--async", dest="async_mode", action="store_true",
                     help="asyncio streaming front-end over localhost "
                          "TCP/JSON-lines (requires --spartus)")

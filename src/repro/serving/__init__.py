@@ -8,9 +8,13 @@
                      the synchronous serve_requests driver
 - `async_server`   — asyncio streaming front-end (AsyncSpartusServer):
                      admission-while-running, wall-clock-paced chunks,
-                     per-chunk partial logits to per-session queues
-- `telemetry`      — device-resident aggregated sparsity counters + the
-                     shared latency percentile reduction
+                     per-chunk partial logits to bounded per-session
+                     queues (lagging/backfill slow-consumer policy)
+- `sharding`       — slot-dimension data parallelism: NamedSharding
+                     placement of every pool slab over a 1-D ("data",)
+                     mesh (SessionPool(n_devices=N))
+- `telemetry`      — device-resident per-(layer, slot) sparsity counters
+                     + the shared latency percentile reduction
 
 See docs/serving.md for the architecture and docs/architecture.md for how
 serving fits the full pipeline.

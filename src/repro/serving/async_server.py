@@ -34,6 +34,16 @@ logits *as they are produced*, not after the utterance ends.
   slot train frees, so a load spike queues at the front door instead of
   growing unbounded host state.  Queue-wait and time-to-first-logit
   surface per request and as p50/p95/p99 in ``server.stats()``.
+* **Bounded partial-logit queues**: each session's partials queue holds
+  at most ``partial_queue_len`` blocks.  The driver never blocks on a
+  slow consumer — when a queue is full the session is marked *lagging*:
+  its per-chunk snapshots pause (`SessionPool.pause_partials`), nothing
+  further is buffered host-side for it, and when the client drains the
+  gap is recovered in ONE catch-up fetch from the device logits bank
+  (`SessionPool.peek_rows`, which holds the whole utterance until
+  retirement anyway).  A client that never drains costs a bounded queue
+  plus its (already-allocated) slot — previously one stalled client
+  accumulated every ``[C, n_classes]`` block of its stream forever.
 
 The streamed rows are bit-identical to the synchronous path: the driver
 runs the very same chunked `step_chunk` dispatch, so
@@ -74,7 +84,7 @@ class _ClientState:
 
     __slots__ = ("req_id", "handle", "arrival_wall", "want_partials",
                  "buffered", "closed", "cancelled", "admitted",
-                 "finish_sent")
+                 "finish_sent", "delivered_t", "lagging")
 
     def __init__(self, req_id: int, handle: "StreamHandle",
                  arrival_wall: float, want_partials: bool):
@@ -87,6 +97,9 @@ class _ClientState:
         self.cancelled = False
         self.admitted = False
         self.finish_sent = False
+        self.delivered_t = 0      # frames enqueued on the partials queue
+        self.lagging = False      # queue hit partial_queue_len: snapshots
+        #                           paused until the client drains
 
 
 class StreamHandle:
@@ -112,9 +125,14 @@ class StreamHandle:
         self.admitted = asyncio.Event()
 
     async def send(self, frames: np.ndarray) -> None:
-        """Feed one block of frames ``[n, D]`` (or a single frame ``[D]``)."""
+        """Feed one block of frames ``[n, D]`` (or a single frame ``[D]``).
+
+        Sends only buffer host-side and set the driver's wake event —
+        they do NOT yield per call (the old per-send ``sleep(0)`` poke
+        context-switched into the driver once per client send; the driver
+        drains every client's buffered ops in one batched pump per chunk
+        boundary instead)."""
         self._server._client_send(self.req_id, frames)
-        await asyncio.sleep(0)   # give the driver a chance to run
 
     def close(self) -> None:
         """No more frames: the session retires once everything fed has
@@ -135,6 +153,10 @@ class StreamHandle:
 
     async def __anext__(self) -> PartialLogits:
         item = await self._partials.get()
+        # a lagging (slow-consumer) session's snapshots are paused; tell
+        # the driver we drained so it can backfill + resume even if it is
+        # otherwise idle (no-op for healthy sessions):
+        self._server._note_drain(self.req_id)
         if item is _EOS:
             raise StopAsyncIteration
         return item
@@ -159,30 +181,50 @@ class AsyncSpartusServer:
         admission-queue bound: at most this many clients wait for a slot;
         further ``submit``/``stream`` calls await (backpressure).
         ``None`` = unbounded (open-loop load generation).
+    partial_queue_len:
+        per-session bound on buffered partial-logit blocks (the
+        slow-consumer fix): when a client stops draining its queue, the
+        driver marks the session lagging, pauses its per-chunk snapshots
+        and buffers nothing more for it — the skipped range is recovered
+        from the device logits bank in one fetch when the client drains
+        (or arrives with the final result).  The driver never blocks and
+        healthy sessions are unaffected.  ``None`` = the default bound
+        (32); ``0`` = unbounded (the pre-fix behaviour, load-gen only).
     offload_ticks:
         run each ``pool.tick`` in a one-thread executor so the event loop
         stays responsive (client sends land mid-chunk) — the pool is only
         ever touched by one thread at a time, since the driver awaits the
         tick before pumping again.  ``False`` keeps ticks on the loop
         (slightly less overhead; fine when clients batch their sends).
+    n_devices:
+        shard the pool's slot dimension over this many devices
+        (`SessionPool(n_devices=...)`: slot-parallel SPMD dispatch,
+        least-loaded-shard admission).  ``None`` = single-device.
     """
+
+    DEFAULT_PARTIAL_QUEUE_LEN = 32
 
     def __init__(self, engine: BatchedSpartusEngine, capacity: int, *,
                  chunk_frames: int = 8, target_chunk_ms: float = 0.0,
                  max_pending: Optional[int] = None, max_frames: int = 64,
                  max_buffer_frames: Optional[int] = None,
-                 offload_ticks: bool = True):
+                 partial_queue_len: Optional[int] = None,
+                 offload_ticks: bool = True,
+                 n_devices: Optional[int] = None):
         if chunk_frames < 1:
             raise ValueError("AsyncSpartusServer requires chunk_frames >= 1 "
                              "(the per-chunk partial-logits contract)")
         self.pool = SessionPool(
             engine, capacity, max_frames=max_frames,
             chunk_frames=chunk_frames, max_buffer_frames=max_buffer_frames,
-            stream_partials=True)
+            stream_partials=True, n_devices=n_devices)
         self.capacity = capacity
         self.chunk_frames = chunk_frames
         self.target_chunk_s = target_chunk_ms * 1e-3
         self.max_pending = max_pending
+        self.partial_queue_len = (self.DEFAULT_PARTIAL_QUEUE_LEN
+                                  if partial_queue_len is None
+                                  else max(int(partial_queue_len), 0))
         self._sem = (asyncio.Semaphore(max_pending)
                      if max_pending is not None else None)
         self._offload = offload_ticks
@@ -190,6 +232,13 @@ class AsyncSpartusServer:
         self._ids = itertools.count()
         self._clients: Dict[int, _ClientState] = {}
         self._waiting: Deque[_ClientState] = deque()
+        # batched-pump bookkeeping: only clients with buffered ops are
+        # visited per boundary (the pump used to scan every client every
+        # iteration), and the partial-snapshot toggle is a counter, not
+        # an any() sweep:
+        self._dirty: set = set()
+        self._lagging: set = set()
+        self._n_partial_subs = 0
         self._wake: Optional[asyncio.Event] = None
         self._driver: Optional[asyncio.Task] = None
         self._stopping = False
@@ -260,6 +309,8 @@ class AsyncSpartusServer:
             cs.buffered.append(feats)
         self._clients[req_id] = cs
         self._waiting.append(cs)
+        if want_partials:
+            self._n_partial_subs += 1
         self._wake.set()
         return handle
 
@@ -321,6 +372,7 @@ class AsyncSpartusServer:
         already = (sum(b.shape[0] for b in cs.buffered)
                    + (self.pool._live(req_id).n_recv if in_pool else 0))
         cs.buffered.append(self._validated(frames, already))
+        self._dirty.add(req_id)
         self._wake.set()
 
     def _client_close(self, req_id: int) -> None:
@@ -328,6 +380,7 @@ class AsyncSpartusServer:
         if cs is None or cs.cancelled:
             return
         cs.closed = True
+        self._dirty.add(req_id)
         self._wake.set()
 
     def _client_cancel(self, req_id: int) -> None:
@@ -335,21 +388,32 @@ class AsyncSpartusServer:
         if cs is None or cs.cancelled:
             return
         cs.cancelled = True
+        self._dirty.add(req_id)
         self._wake.set()
+
+    def _note_drain(self, req_id: int) -> None:
+        """A consumer took an item off its partials queue: if its session
+        is lagging, wake the driver so `_service_lagging` can backfill
+        and resume it even when the pool is otherwise idle."""
+        if req_id in self._lagging and self._wake is not None:
+            self._wake.set()
 
     # -- driver --------------------------------------------------------------
 
     def _pump(self) -> None:
         """Move client state into the pool (driver only, between ticks):
         admissions for waiting clients while slots are free, then frame
-        appends / finishes / cancellations for admitted ones."""
+        appends / finishes / cancellations for the clients that actually
+        changed since the last boundary (the dirty set) — one batched
+        pass per chunk boundary instead of an every-client scan."""
         pool = self.pool
         # partial snapshots cost a per-chunk [B, C, n_classes] copy+fetch;
-        # skip them entirely while nobody subscribed (pure-submit load):
-        pool.stream_partials = any(
-            cs.want_partials for cs in self._clients.values())
+        # skip them entirely while nobody subscribed (pure-submit load).
+        # Counter-maintained: the any()-over-clients sweep this replaces
+        # was per-iteration O(clients):
+        pool.stream_partials = self._n_partial_subs > 0
         # clients cancelled while still queued need no slot to settle:
-        if any(cs.cancelled for cs in self._waiting):
+        if self._waiting and any(cs.cancelled for cs in self._waiting):
             for cs in [c for c in self._waiting if c.cancelled]:
                 self._waiting.remove(cs)
                 self._settle_cancel(cs)
@@ -379,31 +443,47 @@ class AsyncSpartusServer:
             if cs.closed:
                 pool.finish_stream(cs.req_id)
                 cs.finish_sent = True
-        for cs in list(self._clients.values()):
-            if not cs.admitted:
-                continue
+        dirty, self._dirty = self._dirty, set()
+        for req_id in sorted(dirty):
+            cs = self._clients.get(req_id)
+            if cs is None or not cs.admitted:
+                continue   # settled, or still waiting (its buffered ops
+                #            ride along at admission time)
             if cs.cancelled:
-                # the session may already have retired into the pool's
-                # double-buffer tail; its (unwanted) result is dropped at
-                # delivery because the client is settled here.
-                if cs.req_id in pool._by_req:
-                    pool.cancel(cs.req_id)
+                # the session may be live OR already inside the
+                # retirement window (finished, host fetch outstanding):
+                # pool.cancel covers both, suppressing the result at
+                # resolve time so no stale logits are ever delivered.
+                try:
+                    pool.cancel(req_id)
+                except KeyError:
+                    pass                    # already fully resolved
                 self._settle_cancel(cs)
                 continue
             try:
                 if cs.buffered:
-                    pool.append_frames(cs.req_id, _concat(cs.buffered))
+                    pool.append_frames(req_id, _concat(cs.buffered))
                     cs.buffered.clear()
                 if cs.closed and not cs.finish_sent:
-                    pool.finish_stream(cs.req_id)
+                    pool.finish_stream(req_id)
                     cs.finish_sent = True
             except Exception as exc:
-                if cs.req_id in pool._by_req:
-                    pool.cancel(cs.req_id)
+                try:
+                    pool.cancel(req_id)
+                except KeyError:
+                    pass
                 self._settle_error(cs, exc)
+
+    def _forget(self, cs: _ClientState) -> None:
+        """Drop driver-side bookkeeping for a client leaving the server."""
+        self._dirty.discard(cs.req_id)
+        self._lagging.discard(cs.req_id)
+        if cs.want_partials:
+            self._n_partial_subs -= 1
 
     def _settle_cancel(self, cs: _ClientState) -> None:
         del self._clients[cs.req_id]
+        self._forget(cs)
         if not cs.admitted and self._sem is not None:
             self._sem.release()
         cs.handle._partials.put_nowait(_EOS)
@@ -413,24 +493,91 @@ class AsyncSpartusServer:
     def _settle_error(self, cs: _ClientState, exc: Exception) -> None:
         """Fail ONE client's handle with its own error (driver stays up)."""
         self._clients.pop(cs.req_id, None)
+        self._forget(cs)
         if not cs.admitted and self._sem is not None:
             self._sem.release()
         cs.handle._partials.put_nowait(_EOS)
         if not cs.handle._result.done():
             cs.handle._result.set_exception(exc)
 
+    def _push_partial(self, cs: _ClientState, t0: int,
+                      rows: np.ndarray) -> None:
+        """Enqueue one partial block, bounded: trim anything a backfill
+        already covered, and on a full queue mark the session lagging —
+        pause its pool-side snapshots, buffer nothing (the skipped rows
+        stay in the device logits bank until the client drains)."""
+        n = rows.shape[0]
+        if t0 + n <= cs.delivered_t:
+            return                       # backfill already covered it
+        if t0 < cs.delivered_t:          # partial overlap after a backfill
+            rows = rows[cs.delivered_t - t0:]
+            t0 = cs.delivered_t
+        q = cs.handle._partials
+        if self.partial_queue_len and q.qsize() >= self.partial_queue_len:
+            if not cs.lagging:
+                cs.lagging = True
+                self._lagging.add(cs.req_id)
+                try:
+                    self.pool.pause_partials(cs.req_id)
+                except KeyError:
+                    pass                 # retired already; the final
+                    #                      result carries the tail
+            return
+        q.put_nowait(PartialLogits(req_id=cs.req_id, t0=t0, rows=rows))
+        cs.delivered_t = t0 + rows.shape[0]
+
+    def _service_lagging(self) -> None:
+        """Resume sessions whose slow consumer drained below the bound:
+        backfill the skipped range in ONE catch-up fetch from the device
+        logits bank, then re-enable their per-chunk snapshots."""
+        if not self._lagging:
+            return
+        for req_id in sorted(self._lagging):
+            cs = self._clients.get(req_id)
+            if cs is None:
+                self._lagging.discard(req_id)
+                continue
+            q = cs.handle._partials
+            if self.partial_queue_len and \
+                    q.qsize() >= self.partial_queue_len:
+                continue                 # still stalled
+            if req_id in self.pool._by_req:
+                rows = self.pool.peek_rows(req_id, cs.delivered_t)
+                if rows.shape[0]:
+                    q.put_nowait(PartialLogits(
+                        req_id=req_id, t0=cs.delivered_t, rows=rows))
+                    cs.delivered_t += rows.shape[0]
+                self.pool.resume_partials(req_id)
+            cs.lagging = False
+            self._lagging.discard(req_id)
+
     def _deliver(self, partials: List[PartialLogits],
                  finished: List[RequestResult]) -> None:
+        """One batched delivery pass per chunk boundary: every partial
+        block and result lands on its client's queue/future here (the
+        waiting tasks' wakeups are then scheduled together by the event
+        loop, instead of interleaving per-session pokes with pool work)."""
         for p in partials:
             cs = self._clients.get(p.req_id)
             if cs is not None and cs.want_partials:
-                cs.handle._partials.put_nowait(p)
+                self._push_partial(cs, p.t0, p.rows)
+        if not finished:
+            return
+        self._t_last = time.perf_counter()   # one clock read per boundary
         for r in finished:
-            self._t_last = time.perf_counter()
             self._completed.append(r)
             cs = self._clients.pop(r.req_id, None)
             if cs is None:
                 continue
+            self._forget(cs)
+            if cs.want_partials and cs.delivered_t < r.logits.shape[0]:
+                # lagging tail: the queue bound skipped blocks that never
+                # got a drain; the result rows are host-side already, so
+                # the catch-up block is one slice, not a device fetch.
+                cs.handle._partials.put_nowait(PartialLogits(
+                    req_id=r.req_id, t0=cs.delivered_t,
+                    rows=r.logits[cs.delivered_t:]))
+                cs.delivered_t = r.logits.shape[0]
             cs.handle._partials.put_nowait(_EOS)
             if not cs.handle._result.done():
                 cs.handle._result.set_result(r)
@@ -461,6 +608,7 @@ class AsyncSpartusServer:
         while True:
             self._wake.clear()
             self._pump()
+            self._service_lagging()
             if not self._has_work():
                 if self._stopping and not self._clients and \
                         not self._waiting:

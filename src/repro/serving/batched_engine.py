@@ -120,7 +120,7 @@ class BatchedSpartusEngine(PackedSpartusModel):
     def init_state(self, n_slots: int) -> PoolState:
         return PoolState(
             layers=tuple(_fresh_layer_state(l, n_slots) for l in self.layers),
-            telemetry=tele.init_telemetry(len(self.layers)),
+            telemetry=tele.init_telemetry(len(self.layers), n_slots),
             cursor=jnp.zeros((n_slots,), jnp.int32),
         )
 

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+from repro.serving import sharding as shardlib
 from repro.serving import telemetry as tele
 
 #: default ceiling on the per-slot frame-buffer length (frames).  The device
@@ -196,6 +197,8 @@ class _Session:
     last_step: int = 0     # tick of the most recent consumed frame
     needs_reset: bool = True
     cancelled: bool = False
+    partials_paused: bool = False  # slow consumer: skip snapshot_chunk
+    #                                entries for this slot until resumed
     first_logit_wall: float = 0.0  # 0.0 = no logits surfaced yet
     rows: List[np.ndarray] = dataclasses.field(default_factory=list)
 
@@ -387,12 +390,24 @@ class SessionPool:
     admission or accumulated by appends) is rejected with a ValueError:
     the device frame buffers grow in pow2 buckets up to that ceiling and
     nothing in the pool ever truncates silently.
+
+    ``n_devices=N >= 1`` shards the pool's slot dimension over a 1-D
+    ``("data",)`` mesh (`serving/sharding.py`): every per-slot device
+    slab — layer state, frame buffers, cursors, lengths, the logits
+    bank, telemetry — is partitioned into contiguous slot blocks, one
+    per device, and the same jitted step/chunk dispatch runs SPMD with
+    zero cross-device communication in the steady state (slots are
+    independent).  Admission places each session on the least-loaded
+    shard; a capacity not divisible by N falls back to replication (the
+    never-invalid rule), which is correct but not parallel.  The public
+    API is unchanged — only placement differs.
     """
 
     def __init__(self, engine: BatchedSpartusEngine, capacity: int,
                  max_frames: int = 64, chunk_frames: int = 0,
                  max_buffer_frames: Optional[int] = None,
-                 stream_partials: bool = False):
+                 stream_partials: bool = False,
+                 n_devices: Optional[int] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if chunk_frames < 0:
@@ -408,6 +423,12 @@ class SessionPool:
             raise ValueError(
                 f"max_frames={max_frames} exceeds max_buffer_frames="
                 f"{self.max_buffer_frames}")
+        # slot-dimension data parallelism (None = single-device layout,
+        # bit-for-bit the pre-sharding pool):
+        self._mesh = (shardlib.make_pool_mesh(int(n_devices))
+                      if n_devices is not None else None)
+        self.n_shards = (shardlib.n_pool_shards(self._mesh, capacity)
+                         if self._mesh is not None else 1)
         self.state: PoolState = engine.init_state(capacity)
         self._slots: List[Optional[_Session]] = [None] * capacity
         self._by_req: Dict[int, int] = {}
@@ -425,6 +446,15 @@ class SessionPool:
         self._out: Optional[jax.Array] = (
             engine.init_out_buf(capacity, self._t_buf + chunk_frames)
             if chunk_frames else None)
+        if self._mesh is not None:
+            # one placement pass at construction; the step functions
+            # donate every slab, so the sharding persists tick over tick.
+            self.state = shardlib.shard_pool_state(self.state, self._mesh)
+            self._frames = shardlib.shard_slot_array(self._frames, self._mesh)
+            self._lengths = shardlib.shard_slot_array(self._lengths,
+                                                      self._mesh)
+            if self._out is not None:
+                self._out = shardlib.shard_slot_array(self._out, self._mesh)
         self._pending: List[_PendingChunk] = []
         self._pending_partials: List[_PendingPartials] = []
         self._partials: List[PartialLogits] = []
@@ -437,6 +467,38 @@ class SessionPool:
         self.n_frame_grows = 0
         self.n_dispatches = 0
         self._overlap_fracs: List[float] = []
+
+    def _dev1d(self, arr: np.ndarray) -> jax.Array:
+        """Place a per-slot host vector (active/reset masks, chunk-start
+        cursors) to match the pool's slot sharding.  Identity-cost when
+        unsharded (the jitted step converts host arrays itself); in
+        sharded mode an explicit placement keeps every dispatch input on
+        the agreed layout so GSPMD never has to guess (a differently
+        placed mask would recompile the step)."""
+        if self._mesh is None:
+            return arr
+        return shardlib.shard_slot_array(jnp.asarray(arr), self._mesh)
+
+    def _ensure_slot_sharding(self) -> None:
+        """Re-pin the frame/length buffers to the slot sharding if an
+        upload scatter's output landed elsewhere (GSPMD usually preserves
+        the operand sharding; this is the cheap invariant check that
+        makes it a guarantee).  No-op when unsharded."""
+        if self._mesh is None:
+            return
+        fs = shardlib.slot_sharding(self._frames.shape, self._mesh)
+        if self._frames.sharding != fs:
+            self._frames = jax.device_put(self._frames, fs)
+        ls = shardlib.slot_sharding(self._lengths.shape, self._mesh)
+        if self._lengths.sharding != ls:
+            self._lengths = jax.device_put(self._lengths, ls)
+
+    def shard_loads(self) -> List[int]:
+        """Occupied-slot count per shard (admission placement telemetry)."""
+        per = self.capacity // self.n_shards
+        return [sum(self._slots[k] is not None
+                    for k in range(s * per, (s + 1) * per))
+                for s in range(self.n_shards)]
 
     @property
     def n_active(self) -> int:
@@ -506,23 +568,49 @@ class SessionPool:
                 f"exceeds the frame-buffer growth limit "
                 f"(max_buffer_frames={self.max_buffer_frames}); split the "
                 f"stream or build the pool with a larger limit")
-        for k in range(self.capacity):
-            if self._slots[k] is None:
-                wall = (time.perf_counter() if arrival_wall is None
-                        else arrival_wall)
-                self._slots[k] = _Session(
-                    req_id=req_id, arrival_step=arrival_step,
-                    admit_step=now, arrival_wall=wall,
-                    admit_wall=time.perf_counter(), total=total,
-                    n_recv=n, last_step=now - 1)
-                self._by_req[req_id] = k
-                # host-side staging only; the device upload happens once
-                # per admission wave, at the next step/chunk boundary.
-                # Zero-length stagings still clear the slot's stale device
-                # length from its previous occupant.
-                self._staged.append((k, feats))
-                return True
-        return False
+        k = self._pick_slot()
+        if k is None:
+            return False
+        wall = (time.perf_counter() if arrival_wall is None
+                else arrival_wall)
+        self._slots[k] = _Session(
+            req_id=req_id, arrival_step=arrival_step,
+            admit_step=now, arrival_wall=wall,
+            admit_wall=time.perf_counter(), total=total,
+            n_recv=n, last_step=now - 1)
+        self._by_req[req_id] = k
+        # host-side staging only; the device upload happens once
+        # per admission wave, at the next step/chunk boundary.
+        # Zero-length stagings still clear the slot's stale device
+        # length from its previous occupant.
+        self._staged.append((k, feats))
+        return True
+
+    def _pick_slot(self) -> Optional[int]:
+        """Device-aware slot placement: the first free slot on the
+        least-loaded shard (ties toward the lower shard index), so
+        admissions spread evenly across devices instead of filling shard
+        0 first and leaving the others' slot blocks masked idle.
+        Unsharded pools (n_shards == 1) keep the first-free policy —
+        identical slot assignment to the pre-sharding pool."""
+        if self.n_shards <= 1:
+            for k, s in enumerate(self._slots):
+                if s is None:
+                    return k
+            return None
+        per = self.capacity // self.n_shards
+        best_k, best_load = None, per + 1
+        for s in range(self.n_shards):
+            free_k, load = None, 0
+            for k in range(s * per, (s + 1) * per):
+                if self._slots[k] is None:
+                    if free_k is None:
+                        free_k = k
+                else:
+                    load += 1
+            if free_k is not None and load < best_load:
+                best_k, best_load = free_k, load
+        return best_k
 
     def _live(self, req_id: int) -> _Session:
         if req_id not in self._by_req:
@@ -564,10 +652,68 @@ class SessionPool:
             sess.total = sess.n_recv
 
     def cancel(self, req_id: int) -> None:
-        """Abandon a live session: its slot frees at the next boundary and
-        no result is produced."""
+        """Abandon a session: its slot frees at the next boundary and no
+        result is produced.  Also covers the retirement window — a
+        session that already finished inside an in-flight chunk (its
+        device-side snapshot taken, the one-chunk-later host fetch still
+        outstanding) is suppressed at resolve time, so a cancel can never
+        race the double buffer into delivering a dead session's logits.
+        Raises KeyError only for a request the pool has no trace of."""
+        if req_id in self._by_req:
+            sess = self._slots[self._by_req[req_id]]
+            assert sess is not None
+            sess.cancelled = True
+            return
+        for p in self._pending:
+            for sess in p.sessions:
+                if sess.req_id == req_id:
+                    sess.cancelled = True
+                    return
+        raise KeyError(f"request {req_id} is not in the pool")
+
+    def pause_partials(self, req_id: int) -> None:
+        """Stop snapshotting partial-logit chunks for one live session (a
+        lagging consumer): its frames keep advancing and its logits keep
+        banking in the device output buffer, but no further per-chunk
+        host copies are made for it until ``resume_partials``.  The
+        missed range stays recoverable via ``peek_rows`` (or the final
+        ``RequestResult``) — this is the pool half of the async server's
+        bounded-queue slow-consumer policy.  Chunked pools only: the
+        per-frame path has no logits bank to backfill from, so pausing
+        there would silently drop rows."""
+        if not self.chunk_frames:
+            raise RuntimeError("pause_partials requires a chunked pool "
+                               "(chunk_frames >= 1)")
+        self._live(req_id).partials_paused = True
+
+    def resume_partials(self, req_id: int) -> None:
+        """Re-enable per-chunk partial snapshots for a live session (the
+        consumer drained; the caller backfills the gap via ``peek_rows``)."""
+        if not self.chunk_frames:
+            raise RuntimeError("resume_partials requires a chunked pool "
+                               "(chunk_frames >= 1)")
+        self._live(req_id).partials_paused = False
+
+    def peek_rows(self, req_id: int, t0: int = 0) -> np.ndarray:
+        """Fetch a live session's banked logits rows ``[t0, cursor)`` from
+        the device output buffer (chunked mode only).
+
+        This is the slow-consumer backfill path: rows the partial stream
+        skipped while the session was paused are still in the logits bank
+        (it holds the whole utterance until retirement), so a consumer
+        that drains late pays one catch-up fetch instead of the server
+        having buffered every skipped chunk host-side.  The fetch syncs
+        on the in-flight chunk (the rows include frames it is writing) —
+        an explicitly rare, caller-initiated sync, not a steady-state one.
+        """
+        if not self.chunk_frames:
+            raise RuntimeError("peek_rows requires a chunked pool "
+                               "(chunk_frames >= 1)")
         sess = self._live(req_id)
-        sess.cancelled = True
+        hi = sess.cursor
+        if t0 >= hi:
+            return np.zeros((0, self.engine.n_classes), np.float32)
+        return np.asarray(self._out[self._by_req[req_id], t0:hi])
 
     def _reap_cancelled(self) -> None:
         """Free cancelled sessions' slots and drop their staged uploads
@@ -607,10 +753,14 @@ class SessionPool:
         new_t = _frame_bucket(t_need, floor=old_t)
         grown = jnp.zeros((self.capacity, new_t, self.engine.input_dim),
                           jnp.float32)
+        if self._mesh is not None:
+            grown = shardlib.shard_slot_array(grown, self._mesh)
         self._frames = grown.at[:, :old_t, :].set(self._frames)
         if self._out is not None:
             out = jnp.zeros((self.capacity, new_t + self.chunk_frames,
                              self.engine.n_classes), jnp.float32)
+            if self._mesh is not None:
+                out = shardlib.shard_slot_array(out, self._mesh)
             self._out = out.at[
                 :, :old_t + self.chunk_frames, :].set(self._out)
         self._t_buf = new_t
@@ -665,6 +815,7 @@ class SessionPool:
             self._frames, self._lengths = _device_append(
                 self._frames, self._lengths, jax.device_put(rows), slots,
                 starts, ts)
+        self._ensure_slot_sharding()
 
     def _masks(self) -> Tuple[np.ndarray, np.ndarray]:
         """active = occupied AND has unconsumed frames (a starved streaming
@@ -695,7 +846,8 @@ class SessionPool:
         self._flush_uploads()
 
         self.state, logits = self.engine.step_frames(
-            self.state, self._frames, active, reset)
+            self.state, self._frames, self._dev1d(active),
+            self._dev1d(reset))
         self.n_dispatches += 1
         logits_np = np.asarray(logits)          # ONE device->host fetch/tick
 
@@ -773,8 +925,8 @@ class SessionPool:
 
         t0 = time.perf_counter()
         self.state, self._out = self.engine.step_chunk(
-            self.state, self._frames, self._lengths, active, reset,
-            self._out, n_frames=n)
+            self.state, self._frames, self._lengths, self._dev1d(active),
+            self._dev1d(reset), self._out, n_frames=n)
         self.n_dispatches += 1
         t_dispatched = time.perf_counter()
 
@@ -791,7 +943,7 @@ class SessionPool:
                 continue
             sess.cursor += adv
             sess.last_step = now + adv - 1
-            if self.stream_partials:
+            if self.stream_partials and not sess.partials_paused:
                 partial_entries.append((sess, k, int(starts[k]), adv))
             if sess.done:
                 retiring.append(sess)
@@ -812,7 +964,8 @@ class SessionPool:
             # [B, n, n_classes] window, not the whole buffer:
             newly_partials.append(_PendingPartials(
                 entries=partial_entries,
-                rows=self.engine.snapshot_chunk(self._out, starts,
+                rows=self.engine.snapshot_chunk(self._out,
+                                                self._dev1d(starts),
                                                 n_frames=n)))
         finished = self._resolve()           # syncs on the PREVIOUS chunk
         t_end = time.perf_counter()
@@ -898,6 +1051,8 @@ class SessionPool:
         for p in pend:
             rows = np.asarray(p.rows)          # ONE fetch per chunk
             for sess, k, t0, adv in p.entries:
+                if sess.cancelled:
+                    continue                   # cancelled mid-window
                 if not sess.first_logit_wall:
                     sess.first_logit_wall = time.perf_counter()
                 self._partials.append(PartialLogits(
@@ -911,6 +1066,9 @@ class SessionPool:
         for p in pend:
             rows = np.asarray(p.rows)          # ONE fetch for all retirees
             for sess, k in zip(p.sessions, p.slots):
+                if sess.cancelled:
+                    continue   # cancelled inside the retirement window:
+                    #            the snapshot is dropped, never delivered
                 out.append(sess.result(rows[k, :sess.cursor].copy()))
         return out
 
@@ -971,6 +1129,7 @@ def serve_requests(
     capacity: int,
     max_steps: Optional[int] = None,
     chunk_frames: int = 0,
+    n_devices: Optional[int] = None,
 ) -> Tuple[List[RequestResult], ServeStats]:
     """Drive a request stream through a `SessionPool` to completion.
 
@@ -995,6 +1154,10 @@ def serve_requests(
     ``max_steps``, so partial logits come in chunk granularity.
     ``total_steps`` counts only ticks that advanced at least one slot, so
     frames/step utilisation is not diluted by idle fast-forward ticks.
+
+    ``n_devices=N`` shards the pool's slot dimension over N devices
+    (`SessionPool(n_devices=...)`): same API, same results, one SPMD
+    dispatch per tick across all devices.
     """
     pending = deque(_normalize(requests))
     n_requests = len(pending)
@@ -1003,7 +1166,8 @@ def serve_requests(
     max_frames = max((r.n_frames for r in pending), default=1)
     pool = SessionPool(
         engine, capacity, max_frames=max_frames, chunk_frames=chunk_frames,
-        max_buffer_frames=max(max_frames, DEFAULT_MAX_BUFFER_FRAMES))
+        max_buffer_frames=max(max_frames, DEFAULT_MAX_BUFFER_FRAMES),
+        n_devices=n_devices)
     waiting: deque[Tuple[StreamRequest, float]] = deque()
     results: List[RequestResult] = []
     now = 0

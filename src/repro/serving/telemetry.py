@@ -3,15 +3,19 @@ pool and the asyncio front-end.
 
 The batch-1 `SpartusEngine` appends a Python dict per (step, layer) with
 `int()` host syncs on every frame — fine for one utterance, fatal for a
-server.  Here telemetry is three `[L]` integer accumulators that live on
-device and are folded into `BatchedSpartusEngine.step_batch` itself, so
-the steady state does zero host round-trips.  The accumulators ride the
-chunked tick loop for free: they are part of the `lax.scan` carry in
-`step_chunk`, so one chunk dispatch folds in L x C (layer, frame)
-samples — only frames a slot actually consumed count, since `accumulate`
-masks by the per-iteration active mask.  `measured_sparsity` fetches
-the accumulators once, on demand, and reduces them to the same summary
-statistics the batch-1 engine reports:
+server.  Here telemetry is three `[L, B]` accumulators (layer x slot)
+that live on device and are folded into `BatchedSpartusEngine.step_batch`
+itself, so the steady state does zero host round-trips.  The accumulators
+ride the chunked tick loop for free: they are part of the `lax.scan`
+carry in `step_chunk`, so one chunk dispatch folds in L x C (layer,
+frame) samples — only frames a slot actually consumed count, since
+`accumulate` masks by the per-iteration active mask.  Keeping the slot
+dimension (rather than summing over it per step) is what lets the
+sharded pool (docs/serving.md, slot-dimension data parallelism) carry
+telemetry with ZERO cross-device traffic: each device accumulates its
+own slots' columns and the reduction over B happens once, host-side, in
+`measured_sparsity` — which fetches the accumulators on demand and
+reduces them to the same summary statistics the batch-1 engine reports:
 
   temporal_sparsity      = 1 - mean over (active step, layer) of nnz/n_cols
   capacity_overflow_rate = fraction of samples where the NZI list dropped
@@ -36,25 +40,32 @@ import numpy as np
 
 
 class TelemetryState(NamedTuple):
-    """Per-layer accumulators over (active slot, frame) samples.
+    """Per-(layer, slot) accumulators over (active slot, frame) samples.
 
     float32, not int32: a long-running server would wrap an int32 counter
     (garbage statistics), whereas float32 sums stay exact up to 2^24 and
     then round — the reported *ratios* keep ~1e-7 relative accuracy for
     the life of the process (int64/float64 need jax x64, off by default).
+
+    The slot dimension is kept unreduced on purpose: it makes every
+    accumulator a `[.., B]` slab that shards over the pool's slot axis
+    exactly like the layer state, so the sharded pool's step needs no
+    cross-device reduction (a per-step ``sum(axis=-1)`` would be an
+    all-reduce per scan iteration).
     """
 
-    nnz_sum: jax.Array         # [L] float32: total fired deltas
-    overflow_steps: jax.Array  # [L] float32: samples where capacity dropped
-    steps: jax.Array           # [L] float32: number of samples
+    nnz_sum: jax.Array         # [L, B] float32: total fired deltas
+    overflow_steps: jax.Array  # [L, B] float32: samples where capacity
+    #                            dropped deltas
+    steps: jax.Array           # [L, B] float32: number of samples
 
 
-def init_telemetry(n_layers: int) -> TelemetryState:
+def init_telemetry(n_layers: int, n_slots: int) -> TelemetryState:
     # three DISTINCT buffers: the serving step/chunk functions donate the
     # whole PoolState, and donating one buffer aliased into three leaves
     # fails with "attempt to donate the same buffer twice"
     def z() -> jax.Array:
-        return jnp.zeros((n_layers,), jnp.float32)
+        return jnp.zeros((n_layers, n_slots), jnp.float32)
 
     return TelemetryState(nnz_sum=z(), overflow_steps=z(), steps=z())
 
@@ -67,13 +78,12 @@ def accumulate(
     active: jax.Array,   # [B] bool slot mask
 ) -> TelemetryState:
     """Fold one layer-step of one batch into the accumulators (traced)."""
-    act = active.astype(jnp.int32)
-    f32 = jnp.float32
+    act = active.astype(jnp.float32)
     return TelemetryState(
-        nnz_sum=tel.nnz_sum.at[layer].add(jnp.sum(nnz * act).astype(f32)),
+        nnz_sum=tel.nnz_sum.at[layer].add(nnz.astype(jnp.float32) * act),
         overflow_steps=tel.overflow_steps.at[layer].add(
-            jnp.sum((dropped > 0).astype(jnp.int32) * act).astype(f32)),
-        steps=tel.steps.at[layer].add(jnp.sum(act).astype(f32)),
+            (dropped > 0).astype(jnp.float32) * act),
+        steps=tel.steps.at[layer].add(act),
     )
 
 
@@ -85,17 +95,17 @@ def accumulate_layers(
 ) -> TelemetryState:
     """Fold one whole step (all layers at once) into the accumulators.
 
-    Same math as L calls to ``accumulate``, but as three [L]-vector adds
-    instead of 3L one-element scatters — the scatters were measurable
-    per-tick overhead on the CPU backend, and inside the chunked
-    ``lax.scan`` this runs once per frame."""
-    act = active.astype(jnp.int32)
-    f32 = jnp.float32
+    Same math as L calls to ``accumulate``, but as three [L, B] slab adds
+    instead of 3L row scatters — the scatters were measurable per-tick
+    overhead on the CPU backend, and inside the chunked ``lax.scan`` this
+    runs once per frame.  Purely elementwise over the slot dimension, so
+    a slot-sharded pool accumulates with zero cross-device traffic."""
+    act = active.astype(jnp.float32)
     return TelemetryState(
-        nnz_sum=tel.nnz_sum + jnp.sum(nnz * act, axis=-1).astype(f32),
-        overflow_steps=tel.overflow_steps + jnp.sum(
-            (dropped > 0).astype(jnp.int32) * act, axis=-1).astype(f32),
-        steps=tel.steps + jnp.sum(act).astype(f32),
+        nnz_sum=tel.nnz_sum + nnz.astype(jnp.float32) * act,
+        overflow_steps=tel.overflow_steps
+        + (dropped > 0).astype(jnp.float32) * act,
+        steps=tel.steps + act,
     )
 
 
@@ -114,12 +124,13 @@ def measured_sparsity(
     tel: TelemetryState, n_cols: Sequence[int]
 ) -> Dict[str, float]:
     """Reduce the accumulators to the engine's summary dict.  This is the
-    only host fetch in the telemetry path."""
+    only host fetch in the telemetry path — and, for a sharded pool, the
+    only place the per-slot columns are ever reduced across devices."""
     nnz, ovf, steps = (np.asarray(jax.device_get(a), np.float64) for a in tel)
     total = steps.sum()
     if total == 0:
         return {}
-    cols = np.asarray(n_cols, np.float64)
+    cols = np.asarray(n_cols, np.float64)[:, None]   # [L, 1] vs [L, B]
     return {
         "temporal_sparsity": float(1.0 - (nnz / cols).sum() / total),
         "capacity_overflow_rate": float(ovf.sum() / total),

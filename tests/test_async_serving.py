@@ -330,6 +330,114 @@ def test_async_stats_total_steps_counts_dispatching_ticks(engines, workload):
     assert stats.total_steps == max(LENS[0], LENS[2])
 
 
+def test_async_slow_consumer_bounded_queue(engines):
+    """The slow-consumer fix: a client that stops draining its partials
+    queue buffers at most ``partial_queue_len`` blocks host-side — the
+    session goes lagging (snapshots paused), the driver never blocks,
+    a concurrently served healthy client is unaffected, and once the
+    stalled client drains it still receives EVERY row (backfilled from
+    the device logits bank / final result) in frame order."""
+    e1, eb = engines
+    bound = 3
+    a_feats = _utterance(400, 10)
+    b_feats = _utterance(401, 48)        # 24 chunks at chunk_frames=2:
+    #                                      vastly more than the bound
+    a_ref = np.asarray(e1.run_utterance(jnp.asarray(a_feats)))
+    b_ref = np.asarray(e1.run_utterance(jnp.asarray(b_feats)))
+
+    async def run():
+        async with AsyncSpartusServer(
+                eb, capacity=2, chunk_frames=2, max_frames=64,
+                partial_queue_len=bound, offload_ticks=False) as srv:
+            hb = await srv.stream(b_feats[:4], want_partials=True)
+            qsizes, mid_parts = [], []
+
+            async def feeder():
+                for j in range(4, 48, 4):
+                    await hb.send(b_feats[j:j + 4])
+                    await asyncio.sleep(0.002)   # let chunks run: B stalls
+                    qsizes.append(hb._partials.qsize())
+                    if j == 24:
+                        # drain two blocks mid-stream: the driver must
+                        # backfill the skipped range and resume streaming
+                        mid_parts.append(await hb.__anext__())
+                        mid_parts.append(await hb.__anext__())
+                hb.close()
+
+            # the healthy client is served while B is stalling:
+            ra, _ = await asyncio.gather(srv.submit(a_feats), feeder())
+            rb = await hb.result()
+            tail = [p async for p in hb]
+            return ra, rb, mid_parts + tail, qsizes
+
+    ra, rb, parts, qsizes = asyncio.run(run())
+    # the bound held the whole time (this is the memory guarantee):
+    assert max(qsizes) <= bound
+    # ...and it actually bound something (the stall really saturated it):
+    assert max(qsizes) == bound
+    # the healthy neighbour is untouched:
+    np.testing.assert_allclose(ra.logits, a_ref, atol=1e-5)
+    # the stalled client still got the complete, in-order stream:
+    np.testing.assert_allclose(rb.logits, b_ref, atol=1e-5)
+    assert [p.t0 for p in parts] == sorted(p.t0 for p in parts)
+    streamed = np.concatenate([p.rows for p in parts])
+    assert streamed.shape[0] == 48
+    np.testing.assert_allclose(streamed, b_ref, atol=1e-5)
+    # lagging coalesced skipped chunks into catch-up blocks (at least one
+    # block wider than a chunk proves the pause/backfill path ran):
+    assert max(p.rows.shape[0] for p in parts) > 2
+
+
+def test_async_cancel_in_retirement_window(engines, workload):
+    """A session cancelled between its in-chunk retirement snapshot and
+    the one-chunk-later host fetch must vanish: no result, no partials,
+    no stats pollution, and its slot is cleanly reused.  The window is
+    caught by polling for 'left the live set but result not yet
+    resolved'; attempts that miss it retry."""
+    _, eb = engines
+    feats, refs = workload
+
+    async def attempt(srv):
+        h = await srv.stream(feats[1], want_partials=True)
+        h.close()
+        for _ in range(10_000):
+            if h.req_id not in srv.pool._by_req:
+                break
+            await asyncio.sleep(0)
+        if h._result.done():
+            return None                  # missed the window; retry
+        h.cancel()                       # <- lands inside the window
+        with pytest.raises(asyncio.CancelledError):
+            await h.result()
+        return [p async for p in h]
+
+    async def run():
+        async with AsyncSpartusServer(eb, capacity=1, chunk_frames=4,
+                                      max_frames=16,
+                                      offload_ticks=False) as srv:
+            caught, misses = None, 0
+            for _ in range(25):
+                caught = await attempt(srv)
+                if caught is not None:
+                    break
+                misses += 1              # raced past the window: that
+                #                          attempt completed normally
+            # the slot is reusable and numerically clean afterwards:
+            survivor = await srv.submit(feats[2])
+            return caught, misses, survivor, srv.stats(), \
+                len(srv._completed)
+
+    caught, misses, survivor, stats, n_completed = asyncio.run(run())
+    assert caught is not None, "never caught the retirement window"
+    np.testing.assert_allclose(survivor.logits, refs[2], atol=1e-5)
+    # the in-window cancel never surfaces anywhere — not in results, not
+    # in the completed/stats accounting (it used to be silently appended
+    # to _completed even though no client could ever see it):
+    assert n_completed == misses + 1
+    assert stats.n_requests == misses + 1
+    assert stats.total_frames == misses * LENS[1] + LENS[2]
+
+
 def test_async_wall_clock_pacing(engines, workload):
     """target_chunk_ms paces chunk boundaries: serving a 12-frame
     utterance in 4-frame chunks at 30 ms/chunk takes >= 2 pacing sleeps

@@ -180,6 +180,39 @@ def test_chunked_max_steps_drains_partial(engines):
         np.testing.assert_allclose(r.logits, ref[:4], atol=1e-5)
 
 
+def test_cancel_during_retirement_window_suppresses_result(engines):
+    """The double-buffer audit: a session that finished inside an
+    in-flight chunk sits in the retirement window (device snapshot taken,
+    host fetch one chunk away).  cancel() during that window must be
+    accepted (the session is not 'unknown' — no result was delivered
+    yet), must suppress the stale result at resolve time, and the freed
+    slot must serve a new session with clean numerics."""
+    e1, eb = engines
+    feats = [_utterance(280, 3), _utterance(281, 5)]
+    pool = SessionPool(eb, capacity=1, max_frames=16, chunk_frames=4)
+
+    assert pool.admit(StreamRequest(0, 0, feats[0]), 0)
+    done_now = pool.step_chunk(now=0)
+    assert done_now == []                 # double-buffered: fetch pending
+    assert 0 not in pool._by_req          # retired from the live set...
+    assert pool.has_pending               # ...but the fetch is outstanding
+    pool.cancel(0)                        # <- inside the window
+
+    # the freed slot serves the next session; the cancelled session's
+    # pending snapshot resolves to NOTHING:
+    assert pool.admit(StreamRequest(1, 1, feats[1]), 1)
+    results = []
+    for t in (1, 5):
+        results.extend(pool.step_chunk(now=t))
+    results.extend(pool.flush())
+    assert [r.req_id for r in results] == [1]
+    ref = np.asarray(e1.run_utterance(jnp.asarray(feats[1])))
+    np.testing.assert_allclose(results[0].logits, ref, atol=1e-5)
+    # a request the pool has never seen still raises:
+    with pytest.raises(KeyError):
+        pool.cancel(99)
+
+
 def test_chunked_pool_rejects_per_frame_step_and_vice_versa(engines):
     _, eb = engines
     chunked = SessionPool(eb, capacity=2, chunk_frames=4)
@@ -263,19 +296,23 @@ def test_no_per_tick_reallocation(engines):
 
 def test_accumulate_layers_matches_per_layer_accumulate():
     """The vectorised whole-step telemetry fold equals L sequential
-    per-layer accumulate() calls (the oracle it replaced in the step)."""
+    per-layer accumulate() calls (the oracle it replaced in the step).
+    Accumulators are per-(layer, slot) — the slot dim is reduced only in
+    measured_sparsity, never in the step (the sharded pool depends on
+    that: a per-step slot reduction would be a per-frame all-reduce)."""
     L, B = 3, 5
     rng = np.random.default_rng(0)
     nnz = jnp.asarray(rng.integers(0, 50, (L, B)), jnp.int32)
     dropped = jnp.asarray(rng.integers(0, 3, (L, B)), jnp.int32)
     active = jnp.asarray(rng.random(B) < 0.6)
 
-    stacked = tele.accumulate_layers(tele.init_telemetry(L), nnz, dropped,
+    stacked = tele.accumulate_layers(tele.init_telemetry(L, B), nnz, dropped,
                                      active)
-    looped = tele.init_telemetry(L)
+    looped = tele.init_telemetry(L, B)
     for li in range(L):
         looped = tele.accumulate(looped, li, nnz[li], dropped[li], active)
     for a, b in zip(stacked, looped):
+        assert a.shape == (L, B)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -2,6 +2,7 @@
 re-sharding, multi-device train-step smoke (subprocess with 8 host devices).
 """
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -112,11 +113,16 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
 def test_multidevice_train_and_elastic_reshard():
     """8 fake host devices in a subprocess: sharded training decreases the
     loss; re-sharding to a 4-device mesh continues training."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = subprocess.run(
         [sys.executable, "-c", SUBPROCESS_SCRIPT],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        # JAX_PLATFORMS=cpu: the emulated host devices ARE the cpu
+        # platform, and without the pin a box with a TPU plugin installed
+        # burns ~8 minutes of metadata-probe timeouts before falling back
+        env={"PYTHONPATH": os.path.join(repo_root, "src"),
+             "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+        cwd=repo_root,
     )
     assert out.returncode == 0, out.stderr[-2000:]
     data = json.loads(out.stdout.strip().splitlines()[-1])
