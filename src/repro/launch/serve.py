@@ -34,6 +34,26 @@ TCP socket speaking newline-delimited JSON (one object per line):
 streams may be multiplexed over one connection.  Partial logits arrive
 per chunk as they are produced (`target_chunk_ms` paces the boundaries);
 `done` closes the stream with its latency breakdown.
+
+**Admin surface** (--async): `--admin-port P` opens a second localhost
+listener speaking the same JSON-lines convention, read-only, for
+operators scraping the live pool (docs/observability.md):
+
+    client -> {"cmd": "healthz"}
+    server -> {"ok": true, "uptime_s": ..., "connected": ..., "capacity": ...}
+    client -> {"cmd": "stats"}
+    server -> {"stats": { ... ServeStats.to_dict() ... }}
+    client -> {"cmd": "metrics"}
+    server -> {"metrics": {name: {...}}, "prometheus": "<text exposition>"}
+    client -> {"cmd": "timeseries", "last": 64}
+    server -> {"timeseries": [{...per-chunk sample...}], "n_dropped": 0}
+
+Unknown commands answer ``{"error": "..."}`` in-band; the connection
+stays up.  `--stats-interval S` additionally logs a one-line pool-health
+summary every S seconds, and `--trace PATH` records the driver's phase
+spans (admission-wave upload, dispatch, snapshot D2H fetch, delivery
+pump, pacing idle) to a Chrome trace-event JSON on shutdown — load it in
+Perfetto or chrome://tracing.
 """
 from __future__ import annotations
 
@@ -158,6 +178,82 @@ def serve_spartus(args):
           f"({rep.batch1_throughput_gops:.0f} GOp/s effective)")
 
 
+def stats_line(server) -> str:
+    """One-line live pool-health summary (the --stats-interval log line;
+    also what an operator's dashboard would tail).  Prefers the live
+    observability counters when attached — `ServeStats.total_frames` only
+    counts COMPLETED requests, so mid-utterance progress would read 0."""
+    import time as _time
+
+    pool = server.pool
+    stats = server.stats()
+    obs = server.obs
+    frames = (int(obs.c_frames.value) if obs is not None
+              else stats.total_frames)
+    up = (_time.perf_counter() - server._t_start
+          if server._t_start is not None else 0.0)
+    rate = frames / up if up > 0 else 0.0
+    return (f"[stats] occ {pool.n_active}/{server.capacity} "
+            f"conn {server.n_connected} "
+            f"frames {frames} ({rate:.0f}/s) "
+            f"dispatches {stats.n_dispatches} "
+            f"overlap {stats.host_overlap_frac:.0%} "
+            f"lagging {len(server._lagging)}")
+
+
+async def start_admin_server(server, observability, host: str = "127.0.0.1",
+                             port: int = 0):
+    """Open the read-only admin listener over an `AsyncSpartusServer`:
+    newline-delimited JSON commands ``healthz`` / ``stats`` / ``metrics``
+    / ``timeseries`` (see the module docstring for the reply schemas).
+
+    Importable on its own (tools/obs_smoke.py, tests) — returns the
+    ``asyncio.Server``; close it like any other.  Localhost by default:
+    this surface is for operators on the box, not the public protocol."""
+    import asyncio
+    import json
+    import time as _time
+
+    t_started = _time.time()
+
+    def reply(msg):
+        if not isinstance(msg, dict):
+            raise ValueError("admin commands are JSON objects")
+        cmd = msg.get("cmd")
+        if cmd == "healthz":
+            return {"ok": True, "uptime_s": _time.time() - t_started,
+                    "connected": server.n_connected,
+                    "capacity": server.capacity}
+        if cmd == "stats":
+            return {"stats": server.stats().to_dict()}
+        if cmd == "metrics":
+            return {"metrics": observability.registry.snapshot(),
+                    "prometheus": observability.registry.render_prometheus()}
+        if cmd == "timeseries":
+            last = msg.get("last")
+            ts = observability.timeseries
+            return {"timeseries": ts.snapshot(
+                        last=int(last) if last is not None else None),
+                    "n_appended": ts.n_appended, "n_dropped": ts.n_dropped}
+        raise ValueError(f"unknown admin command {cmd!r}")
+
+    async def handle(reader, writer):
+        try:
+            while line := await reader.readline():
+                try:
+                    out = reply(json.loads(line))
+                except Exception as e:   # bad command answers in-band
+                    out = {"error": str(e)}
+                writer.write((json.dumps(out) + "\n").encode())
+                await writer.drain()
+        except ConnectionError:
+            pass
+        finally:
+            writer.close()
+
+    return await asyncio.start_server(handle, host, port)
+
+
 def serve_spartus_async(args):
     """--async: the asyncio streaming front-end behind a localhost
     TCP/JSON-lines protocol (see the module docstring), plus optional
@@ -173,7 +269,7 @@ def serve_spartus_async(args):
     from repro.data.speech import SpeechConfig, SpeechDataset
     from repro.models import lstm_am
     from repro.serving import AsyncSpartusServer, BatchedSpartusEngine, \
-        EngineConfig
+        EngineConfig, PoolObservability, Tracer
 
     data_cfg = SpeechConfig(max_frames=64)
     cfg = lstm_am.LSTMAMConfig(input_dim=data_cfg.feat_dim,
@@ -275,11 +371,21 @@ def serve_spartus_async(args):
         return cid, np.concatenate(rows), done
 
     async def run():
+        obs = PoolObservability(tracer=Tracer(enabled=bool(args.trace)))
         server = AsyncSpartusServer(
             engine, capacity, chunk_frames=chunk,
             target_chunk_ms=args.target_chunk_ms, max_frames=64,
             max_pending=4 * capacity,
-            n_devices=args.devices if args.devices > 0 else None)
+            n_devices=args.devices if args.devices > 0 else None,
+            observability=obs)
+
+        async def log_stats():
+            while True:
+                await asyncio.sleep(args.stats_interval)
+                print(stats_line(server))
+
+        admin = None
+        logger = None
         async with server:
             tcp = await asyncio.start_server(
                 lambda r, w: handle_conn(server, r, w),
@@ -289,31 +395,54 @@ def serve_spartus_async(args):
                     if args.target_chunk_ms else "free-run")
             print(f"[serve] async Spartus server on 127.0.0.1:{port} "
                   f"(capacity {capacity}, {chunk}-frame chunks, {mode})")
-            if args.clients <= 0:
-                print("[serve] serving forever (ctrl-c to stop) ...")
-                async with tcp:
-                    await tcp.serve_forever()
-                return
-            n = args.clients
-            data = SpeechDataset(data_cfg, n)
-            feats, n_frames, *_ = next(data)
-            utts = [np.asarray(feats[i, :max(int(n_frames[i]), 8)],
-                               np.float32) for i in range(n)]
-            out = await asyncio.gather(
-                *[demo_client(port, i, utts[i]) for i in range(n)])
-            tcp.close()
-            await tcp.wait_closed()
-            for cid, streamed, done in out:
-                assert streamed.shape[0] == utts[cid].shape[0]
-            stats = server.stats()
-            print(f"[serve] {n} concurrent TCP clients served "
-                  f"{stats.total_frames} frames; per-client latency "
-                  f"p50 {stats.p50_latency_s*1e3:.0f} ms / "
-                  f"p95 {stats.p95_latency_s*1e3:.0f} ms, "
-                  f"first logit p50 {stats.p50_ttfl_s*1e3:.0f} ms, "
-                  f"queue wait p95 {stats.p95_queue_wait_s*1e3:.0f} ms")
-            print(f"[serve] dispatch economy: {stats.n_dispatches} dispatches "
-                  f"({stats.dispatches_per_frame:.3f}/frame)")
+            try:
+                if args.admin_port >= 0:
+                    admin = await start_admin_server(server, obs,
+                                                     port=args.admin_port)
+                    aport = admin.sockets[0].getsockname()[1]
+                    print(f"[serve] admin endpoint on 127.0.0.1:{aport} "
+                          f"(healthz / stats / metrics / timeseries)")
+                if args.stats_interval > 0:
+                    logger = asyncio.create_task(log_stats())
+                await run_clients(server, tcp, port)
+            finally:
+                if logger is not None:
+                    logger.cancel()
+                if admin is not None:
+                    admin.close()
+                    await admin.wait_closed()
+                if args.trace:
+                    obs.tracer.dump(args.trace)
+                    print(f"[serve] wrote {obs.tracer.n_events} trace events "
+                          f"to {args.trace} (load in Perfetto / "
+                          f"chrome://tracing)")
+
+    async def run_clients(server, tcp, port):
+        if args.clients <= 0:
+            print("[serve] serving forever (ctrl-c to stop) ...")
+            async with tcp:
+                await tcp.serve_forever()
+            return
+        n = args.clients
+        data = SpeechDataset(data_cfg, n)
+        feats, n_frames, *_ = next(data)
+        utts = [np.asarray(feats[i, :max(int(n_frames[i]), 8)],
+                           np.float32) for i in range(n)]
+        out = await asyncio.gather(
+            *[demo_client(port, i, utts[i]) for i in range(n)])
+        tcp.close()
+        await tcp.wait_closed()
+        for cid, streamed, done in out:
+            assert streamed.shape[0] == utts[cid].shape[0]
+        stats = server.stats()
+        print(f"[serve] {n} concurrent TCP clients served "
+              f"{stats.total_frames} frames; per-client latency "
+              f"p50 {stats.p50_latency_s*1e3:.0f} ms / "
+              f"p95 {stats.p95_latency_s*1e3:.0f} ms, "
+              f"first logit p50 {stats.p50_ttfl_s*1e3:.0f} ms, "
+              f"queue wait p95 {stats.p95_queue_wait_s*1e3:.0f} ms")
+        print(f"[serve] dispatch economy: {stats.n_dispatches} dispatches "
+              f"({stats.dispatches_per_frame:.3f}/frame)")
 
     asyncio.run(run())
 
@@ -352,6 +481,18 @@ def main():
     ap.add_argument("--target-chunk-ms", type=float, default=0.0,
                     help="--async: wall-clock pacing per chunk boundary "
                          "(0 = free-run)")
+    ap.add_argument("--admin-port", type=int, default=-1,
+                    help="--async: open the read-only localhost admin "
+                         "endpoint (healthz/stats/metrics/timeseries JSON "
+                         "lines) on this port (0 = ephemeral, printed; "
+                         "-1 = off)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="--async: log a one-line pool-health summary "
+                         "every S seconds (0 = off)")
+    ap.add_argument("--trace", default="",
+                    help="--async: record driver-phase spans and write a "
+                         "Chrome trace-event JSON here on shutdown "
+                         "(Perfetto / chrome://tracing)")
     args = ap.parse_args()
     if args.async_mode:
         if not args.spartus:

@@ -15,6 +15,10 @@
                      mesh (SessionPool(n_devices=N))
 - `telemetry`      — device-resident per-(layer, slot) sparsity counters
                      + the shared latency percentile reduction
+- `metrics`        — live observability: metrics registry (Prometheus
+                     text + JSON snapshot), per-chunk time-series ring,
+                     driver-phase Chrome tracing (PoolObservability,
+                     folded at chunk boundaries only)
 
 See docs/serving.md for the architecture and docs/architecture.md for how
 serving fits the full pipeline.
@@ -30,6 +34,12 @@ from repro.serving.batched_engine import (
     PoolState,
 )
 from repro.serving.engine import EngineConfig, PackedLayer, SpartusEngine
+from repro.serving.metrics import (
+    MetricsRegistry,
+    PoolObservability,
+    TimeSeries,
+    Tracer,
+)
 from repro.serving.scheduler import (
     PartialLogits,
     RequestResult,

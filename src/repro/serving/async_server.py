@@ -62,6 +62,7 @@ from typing import AsyncIterator, Deque, Dict, List, Optional
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine
+from repro.serving.metrics import NULL_TRACER, PoolObservability
 from repro.serving.scheduler import (
     PartialLogits,
     RequestResult,
@@ -200,6 +201,13 @@ class AsyncSpartusServer:
         shard the pool's slot dimension over this many devices
         (`SessionPool(n_devices=...)`: slot-parallel SPMD dispatch,
         least-loaded-shard admission).  ``None`` = single-device.
+    observability:
+        a `PoolObservability` (serving/metrics.py): the pool folds every
+        chunk boundary into its registry/ring buffer, and the driver
+        amends each boundary's sample with loop-side signals (lagging
+        consumers, partial-queue depth, connected streams) and traces the
+        delivery/pacing phases.  Thread-safe with ``offload_ticks`` (the
+        registry and ring lock internally).  ``None`` = fully off.
     """
 
     DEFAULT_PARTIAL_QUEUE_LEN = 32
@@ -210,14 +218,19 @@ class AsyncSpartusServer:
                  max_buffer_frames: Optional[int] = None,
                  partial_queue_len: Optional[int] = None,
                  offload_ticks: bool = True,
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None,
+                 observability: Optional[PoolObservability] = None):
         if chunk_frames < 1:
             raise ValueError("AsyncSpartusServer requires chunk_frames >= 1 "
                              "(the per-chunk partial-logits contract)")
+        self.obs = observability
+        self._tracer = (observability.tracer if observability is not None
+                        else NULL_TRACER)
         self.pool = SessionPool(
             engine, capacity, max_frames=max_frames,
             chunk_frames=chunk_frames, max_buffer_frames=max_buffer_frames,
-            stream_partials=True, n_devices=n_devices)
+            stream_partials=True, n_devices=n_devices,
+            observability=observability)
         self.capacity = capacity
         self.chunk_frames = chunk_frames
         self.target_chunk_s = target_chunk_ms * 1e-3
@@ -623,16 +636,38 @@ class AsyncSpartusServer:
                 finished, adv = pool.tick(self.now)
             self.now += max(adv, 1)
             self._steps += adv
-            self._deliver(pool.take_partials(), finished)
-            if self.target_chunk_s > 0.0:
-                # wall-clock-paced boundaries: one chunk per period; the
-                # sleep is where client coroutines get the loop.
-                delay = self.target_chunk_s - (loop.time() - t0)
-                await asyncio.sleep(delay if delay > 0 else 0)
-            else:
-                await asyncio.sleep(0)      # free-run, but stay preemptible
+            with self._tracer.span("delivery_pump"):
+                self._deliver(pool.take_partials(), finished)
+            if self.obs is not None:
+                self._fold_loop_side(dispatched=adv > 0)
+            with self._tracer.span("pacing_idle"):
+                if self.target_chunk_s > 0.0:
+                    # wall-clock-paced boundaries: one chunk per period;
+                    # the sleep is where client coroutines get the loop.
+                    delay = self.target_chunk_s - (loop.time() - t0)
+                    await asyncio.sleep(delay if delay > 0 else 0)
+                else:
+                    await asyncio.sleep(0)  # free-run, but stay preemptible
 
     # -- observability -------------------------------------------------------
+
+    def _fold_loop_side(self, *, dispatched: bool) -> None:
+        """Fold the driver-loop-side signals the pool cannot see: lagging
+        consumers, the deepest partial queue, connected streams.  When
+        this iteration dispatched a chunk, also amend the boundary sample
+        the pool just appended — host bookkeeping only, no device work."""
+        obs = self.obs
+        lagging = len(self._lagging)
+        depth = max((cs.handle._partials.qsize()
+                     for cs in self._clients.values()), default=0)
+        obs.g_lagging.set(lagging)
+        obs.g_queue_depth.set(depth)
+        obs.g_connected.set(len(self._clients))
+        if dispatched:
+            obs.timeseries.update_last({
+                "lagging": lagging,
+                "partial_queue_depth_max": depth,
+            })
 
     @property
     def n_connected(self) -> int:

@@ -114,6 +114,13 @@ class BatchedSpartusEngine(PackedSpartusModel):
         self._snapshot_out = jax.jit(lambda out: out.copy())
         self._snapshot_chunk = jax.jit(ops.gather_rows,
                                        static_argnames=("n",))
+        # observability: [3] device reduction of the telemetry slabs
+        # (nnz/cols, overflow, steps totals).  Non-donating — it reads
+        # the accumulators the chunk just produced, and is dispatched at
+        # one boundary / fetched at the next, same detach-now/fetch-
+        # later cadence as the output-buffer snapshots above.
+        self._tel_totals = jax.jit(
+            lambda t: tele.fold_totals(t, self.n_cols))
 
     # -- state management ----------------------------------------------------
 
@@ -353,3 +360,12 @@ class BatchedSpartusEngine(PackedSpartusModel):
     def measured_sparsity(self, state: PoolState) -> Dict[str, float]:
         """Single host fetch of the device-resident accumulators."""
         return tele.measured_sparsity(state.telemetry, self.n_cols)
+
+    def telemetry_totals(self, state: PoolState) -> jax.Array:
+        """Dispatch (NOT fetch) the `[3]` running-totals reduction of the
+        telemetry accumulators: ``[sum nnz/cols, sum overflow, sum
+        steps]``.  The observability fold enqueues this each chunk
+        boundary and reads the value one boundary later, so live
+        incremental-sparsity reporting never syncs on the in-flight
+        chunk (see telemetry.fold_totals)."""
+        return self._tel_totals(state.telemetry)

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
@@ -74,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+from repro.serving.metrics import NULL_TRACER, PoolObservability
 from repro.serving import sharding as shardlib
 from repro.serving import telemetry as tele
 
@@ -407,7 +409,8 @@ class SessionPool:
                  max_frames: int = 64, chunk_frames: int = 0,
                  max_buffer_frames: Optional[int] = None,
                  stream_partials: bool = False,
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None,
+                 observability: Optional[PoolObservability] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if chunk_frames < 0:
@@ -467,6 +470,27 @@ class SessionPool:
         self.n_frame_grows = 0
         self.n_dispatches = 0
         self._overlap_fracs: List[float] = []
+        # live observability (metrics.PoolObservability): all sources are
+        # folded at dispatch boundaries only, on host values the pool
+        # already computed — the one device-derived signal (incremental
+        # sparsity) is a [3] reduction enqueued here and fetched one
+        # boundary later, so observability never syncs on the in-flight
+        # chunk and never changes the compiled step (pinned in
+        # tests/test_observability.py).  None = fully off; the tracer
+        # falls back to the shared no-op NULL_TRACER.
+        self.obs = observability
+        self._tracer = (observability.tracer if observability is not None
+                        else NULL_TRACER)
+        self._adm_since_fold = 0
+        # Guards the dispatch-and-rebind of ``self.state`` against readers
+        # on other threads (the async server's ``stats()`` / the admin
+        # endpoint call ``measured_sparsity()`` from the event loop while
+        # ``offload_ticks`` runs the tick in a worker).  Dispatch donates
+        # the old state's buffers the instant it is issued, so a reader
+        # holding a stale reference would fetch a deleted buffer; making
+        # (dispatch + rebind) atomic and reading under the same lock means
+        # readers only ever see the live (possibly in-flight) state.
+        self._state_lock = threading.Lock()
 
     def _dev1d(self, arr: np.ndarray) -> jax.Array:
         """Place a per-slot host vector (active/reset masks, chunk-start
@@ -584,6 +608,9 @@ class SessionPool:
         # Zero-length stagings still clear the slot's stale device
         # length from its previous occupant.
         self._staged.append((k, feats))
+        self._adm_since_fold += 1
+        if self.obs is not None:
+            self.obs.fold_admissions(1)
         return True
 
     def _pick_slot(self) -> Optional[int]:
@@ -662,11 +689,15 @@ class SessionPool:
         if req_id in self._by_req:
             sess = self._slots[self._by_req[req_id]]
             assert sess is not None
+            if not sess.cancelled and self.obs is not None:
+                self.obs.fold_cancelled(1)
             sess.cancelled = True
             return
         for p in self._pending:
             for sess in p.sessions:
                 if sess.req_id == req_id:
+                    if not sess.cancelled and self.obs is not None:
+                        self.obs.fold_cancelled(1)
                     sess.cancelled = True
                     return
         raise KeyError(f"request {req_id} is not in the pool")
@@ -843,13 +874,18 @@ class SessionPool:
         active, reset = self._masks()
         if not active.any():
             return []
-        self._flush_uploads()
+        with self._tracer.span("admission_upload"):
+            self._flush_uploads()
 
-        self.state, logits = self.engine.step_frames(
-            self.state, self._frames, self._dev1d(active),
-            self._dev1d(reset))
+        t0 = time.perf_counter()
+        with self._tracer.span("dispatch"), self._state_lock:
+            self.state, logits = self.engine.step_frames(
+                self.state, self._frames, self._dev1d(active),
+                self._dev1d(reset))
         self.n_dispatches += 1
-        logits_np = np.asarray(logits)          # ONE device->host fetch/tick
+        t_dispatched = time.perf_counter()
+        with self._tracer.span("snapshot_fetch"):
+            logits_np = np.asarray(logits)      # ONE device->host fetch/tick
 
         finished: List[RequestResult] = []
         for k, sess in enumerate(self._slots):
@@ -870,6 +906,13 @@ class SessionPool:
             if sess.done:
                 finished.append(sess.result(np.stack(sess.rows)))
                 self._free(k)
+        if self.obs is not None:
+            self.obs.fold_results(finished)
+            self._fold_boundary(
+                n_active=int(active.sum()), frames=int(active.sum()),
+                dispatch_s=t_dispatched - t0,
+                chunk_s=time.perf_counter() - t0,
+                overlap=0.0, retirements=len(finished))
         return finished
 
     def _free(self, k: int) -> None:
@@ -921,12 +964,14 @@ class SessionPool:
         n = self._chunk_len()
         starts = np.array([0 if s is None else s.cursor
                            for s in self._slots], np.int32)
-        self._flush_uploads()
+        with self._tracer.span("admission_upload"):
+            self._flush_uploads()
 
         t0 = time.perf_counter()
-        self.state, self._out = self.engine.step_chunk(
-            self.state, self._frames, self._lengths, self._dev1d(active),
-            self._dev1d(reset), self._out, n_frames=n)
+        with self._tracer.span("dispatch"), self._state_lock:
+            self.state, self._out = self.engine.step_chunk(
+                self.state, self._frames, self._lengths, self._dev1d(active),
+                self._dev1d(reset), self._out, n_frames=n)
         self.n_dispatches += 1
         t_dispatched = time.perf_counter()
 
@@ -934,6 +979,7 @@ class SessionPool:
         retiring: List[_Session] = []
         slots: List[int] = []
         partial_entries: List[Tuple[_Session, int, int, int]] = []
+        frames_this = 0
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
@@ -941,6 +987,7 @@ class SessionPool:
             adv = min(n, sess.available)
             if adv <= 0:
                 continue
+            frames_this += adv
             sess.cursor += adv
             sess.last_step = now + adv - 1
             if self.stream_partials and not sess.partials_paused:
@@ -967,18 +1014,26 @@ class SessionPool:
                 rows=self.engine.snapshot_chunk(self._out,
                                                 self._dev1d(starts),
                                                 n_frames=n)))
-        finished = self._resolve()           # syncs on the PREVIOUS chunk
+        with self._tracer.span("snapshot_fetch"):
+            finished = self._resolve()       # syncs on the PREVIOUS chunk
         t_end = time.perf_counter()
         self._pending.extend(newly)
         self._pending_partials.extend(newly_partials)
 
         wall = t_end - t0
+        overlap = 0.0
         if wall > 0:
             # fraction of this call's wall time spent doing useful host
             # work AFTER the dispatch returned — retirement bookkeeping,
             # the snapshot dispatch, and the previous chunk's logits
             # fetch — all concurrent with the device executing this chunk.
-            self._overlap_fracs.append((t_end - t_dispatched) / wall)
+            overlap = (t_end - t_dispatched) / wall
+            self._overlap_fracs.append(overlap)
+        if self.obs is not None:
+            self._fold_boundary(
+                n_active=int(active.sum()), frames=frames_this,
+                dispatch_s=t_dispatched - t0, chunk_s=wall,
+                overlap=overlap, retirements=len(finished))
         return finished
 
     def _queue_done_retirements(self) -> None:
@@ -1029,6 +1084,8 @@ class SessionPool:
                     np.stack(sess.rows) if sess.rows else np.zeros(
                         (0, self.engine.n_classes), np.float32)))
                 self._free(k)
+        if self.obs is not None:
+            self.obs.fold_results(finished)
         active, _ = self._masks()
         if active.any():
             return finished + self.step(now), 1
@@ -1070,7 +1127,30 @@ class SessionPool:
                     continue   # cancelled inside the retirement window:
                     #            the snapshot is dropped, never delivered
                 out.append(sess.result(rows[k, :sess.cursor].copy()))
+        if self.obs is not None:
+            self.obs.fold_results(out)
         return out
+
+    def _fold_boundary(self, *, n_active: int, frames: int,
+                       dispatch_s: float, chunk_s: float, overlap: float,
+                       retirements: int) -> None:
+        """One dispatch boundary's fold into the observability layer —
+        host values only, plus the (device, un-fetched) telemetry-totals
+        dispatch that the NEXT boundary's fold will diff."""
+        adm, self._adm_since_fold = self._adm_since_fold, 0
+        self.obs.fold_chunk(
+            occupancy=self.n_active,
+            capacity=self.capacity,
+            n_active=n_active,
+            frames_advanced=frames,
+            dispatch_s=dispatch_s,
+            chunk_s=chunk_s,
+            host_overlap_frac=overlap,
+            admissions=adm,
+            retirements=retirements,
+            shard_loads=self.shard_loads(),
+            telemetry_totals=self.engine.telemetry_totals(self.state),
+        )
 
     def mean_host_overlap_frac(self) -> float:
         return float(np.mean(self._overlap_fracs)) if self._overlap_fracs \
@@ -1089,6 +1169,7 @@ class SessionPool:
         self._staged_appends.clear()
         self._reap_cancelled()
         out: List[RequestResult] = self._resolve()
+        drained: List[RequestResult] = []
         for k, sess in enumerate(self._slots):
             if sess is None:
                 continue
@@ -1099,13 +1180,20 @@ class SessionPool:
             else:
                 logits = (np.stack(sess.rows) if sess.rows
                           else np.zeros((0, n_classes), np.float32))
-            out.append(sess.result(logits, truncated=not sess.done,
-                                   finish_step=now))
+            drained.append(sess.result(logits, truncated=not sess.done,
+                                       finish_step=now))
             self._free(k)
-        return out
+        if self.obs is not None:
+            self.obs.fold_results(drained)
+        return out + drained
 
     def measured_sparsity(self) -> Dict[str, float]:
-        return self.engine.measured_sparsity(self.state)
+        # Thread-safe against an in-flight offloaded tick: holding the
+        # lock keeps the next dispatch from donating ``self.state`` out
+        # from under the host fetch (the fetch itself may block until the
+        # current chunk completes, which is the intended sync point).
+        with self._state_lock:
+            return self.engine.measured_sparsity(self.state)
 
 
 RequestLike = Union[StreamRequest, Tuple[int, np.ndarray]]
@@ -1130,6 +1218,7 @@ def serve_requests(
     max_steps: Optional[int] = None,
     chunk_frames: int = 0,
     n_devices: Optional[int] = None,
+    observability: Optional[PoolObservability] = None,
 ) -> Tuple[List[RequestResult], ServeStats]:
     """Drive a request stream through a `SessionPool` to completion.
 
@@ -1158,6 +1247,11 @@ def serve_requests(
     ``n_devices=N`` shards the pool's slot dimension over N devices
     (`SessionPool(n_devices=...)`): same API, same results, one SPMD
     dispatch per tick across all devices.
+
+    ``observability=PoolObservability(...)`` attaches the live metrics /
+    time-series / tracing layer (serving/metrics.py): every dispatch
+    boundary is folded into its registry and ring buffer, at zero added
+    host syncs.  Results and throughput are identical with it on or off.
     """
     pending = deque(_normalize(requests))
     n_requests = len(pending)
@@ -1167,7 +1261,7 @@ def serve_requests(
     pool = SessionPool(
         engine, capacity, max_frames=max_frames, chunk_frames=chunk_frames,
         max_buffer_frames=max(max_frames, DEFAULT_MAX_BUFFER_FRAMES),
-        n_devices=n_devices)
+        n_devices=n_devices, observability=observability)
     waiting: deque[Tuple[StreamRequest, float]] = deque()
     results: List[RequestResult] = []
     now = 0
@@ -1205,6 +1299,8 @@ def serve_requests(
             break
 
     wall = time.perf_counter() - t0
+    if observability is not None:
+        observability.flush_totals()
     results.sort(key=lambda r: r.req_id)
     stats = aggregate_stats(
         results,

@@ -120,16 +120,44 @@ def percentile_summary(
     return {f"p{q}_{name}": float(np.percentile(arr, q)) for q in qs}
 
 
+def fold_totals(tel: TelemetryState, n_cols: Sequence[int]) -> jax.Array:
+    """Reduce the `[L, B]` accumulators to the three running totals that
+    `measured_sparsity` is built from, ON DEVICE (traced / jittable):
+
+        [sum_l nnz_sum_l / n_cols_l,  overflow.sum(),  steps.sum()]
+
+    This is what the observability layer diffs between chunk boundaries
+    to report *incremental* sparsity: the `[3]` result is dispatched at
+    one boundary and fetched at the next, so the live metrics never add
+    a host sync against an in-flight chunk (metrics.PoolObservability).
+    Host-side, ``measured_sparsity(tel, cols)`` equals the summary
+    computed from ``fold_totals(tel, cols)``'s three numbers."""
+    cols = jnp.asarray(n_cols, jnp.float32)[:, None]   # [L, 1] vs [L, B]
+    return jnp.stack([
+        (tel.nnz_sum / cols).sum(),
+        tel.overflow_steps.sum(),
+        tel.steps.sum(),
+    ])
+
+
 def measured_sparsity(
     tel: TelemetryState, n_cols: Sequence[int]
 ) -> Dict[str, float]:
     """Reduce the accumulators to the engine's summary dict.  This is the
     only host fetch in the telemetry path — and, for a sharded pool, the
-    only place the per-slot columns are ever reduced across devices."""
+    only place the per-slot columns are ever reduced across devices.
+
+    An idle pool (no samples yet) returns the full key set zeroed, like
+    ``percentile_summary`` on an empty sample — callers can always index
+    the summary without guarding for `KeyError`."""
     nnz, ovf, steps = (np.asarray(jax.device_get(a), np.float64) for a in tel)
     total = steps.sum()
     if total == 0:
-        return {}
+        return {
+            "temporal_sparsity": 0.0,
+            "capacity_overflow_rate": 0.0,
+            "mean_active_columns": 0.0,
+        }
     cols = np.asarray(n_cols, np.float64)[:, None]   # [L, 1] vs [L, B]
     return {
         "temporal_sparsity": float(1.0 - (nnz / cols).sum() / total),

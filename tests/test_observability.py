@@ -1,0 +1,290 @@
+"""Integration tests for the serving observability layer: the compiled
+step must be bit-identical (and host-transfer-free) with observability on
+or off, the live counters must agree exactly with `ServeStats`, the
+tick-loop tracer must cover all five driver phases, and the admin
+endpoint must answer every command against a live async pool under load.
+"""
+import asyncio
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lstm_am
+from repro.serving import (
+    AsyncSpartusServer,
+    BatchedSpartusEngine,
+    EngineConfig,
+    PoolObservability,
+    StreamRequest,
+    Tracer,
+    serve_requests,
+)
+from repro.serving.scheduler import SessionPool
+
+INPUT_DIM, HIDDEN, CLASSES = 20, 32, 11
+GAMMA, M, THETA = 0.75, 4, 0.05
+LENS = [5, 9, 3, 12, 1, 7, 8, 2]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = lstm_am.LSTMAMConfig(input_dim=INPUT_DIM, hidden_dim=HIDDEN,
+                               n_layers=2, n_classes=CLASSES)
+    params = lstm_am.cbtd_prune_stacks(
+        lstm_am.init_params(jax.random.key(0), cfg), gamma=GAMMA, m=M)
+    ecfg = EngineConfig(theta=THETA, gamma=GAMMA, m=M, capacity_frac=1.0)
+    return BatchedSpartusEngine(params, cfg, ecfg)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return [np.asarray(
+        jax.random.normal(jax.random.key(900 + i), (t, INPUT_DIM)),
+        np.float32) for i, t in enumerate(LENS)]
+
+
+def _requests(feats):
+    return [StreamRequest(i, 0, f) for i, f in enumerate(feats)]
+
+
+# ------------------------------------------- zero-added-host-transfer pin
+
+def _lower_chunk_hlo(engine, feats, observability):
+    """Compile the pool's chunk step exactly as a serving run would and
+    return its optimized HLO text."""
+    pool = SessionPool(engine, capacity=4, max_frames=16, chunk_frames=4,
+                       observability=observability)
+    for i, f in enumerate(feats[:4]):
+        pool.admit(StreamRequest(100 + i, 0, f), 0)
+    pool._reap_cancelled()
+    active, reset = pool._masks()
+    pool._flush_uploads()
+    return engine._step_chunk.lower(
+        pool.state, pool._frames, pool._lengths, pool._dev1d(active),
+        pool._dev1d(reset), pool._out, n_frames=4).compile().as_text()
+
+
+def test_compiled_chunk_identical_with_and_without_obs(engine, workload):
+    """The boundary-fold rule, pinned at the HLO level: attaching
+    observability must not change the compiled scan by one byte — every
+    metric source folds host-side at chunk boundaries, never inside the
+    step — and the scan itself must contain no host-transfer ops
+    (outfeed/infeed/callback), i.e. zero added host syncs per scan
+    iteration."""
+    hlo_off = _lower_chunk_hlo(engine, workload, observability=None)
+    hlo_on = _lower_chunk_hlo(engine, workload,
+                              observability=PoolObservability())
+    assert hlo_on == hlo_off
+    forbidden = ("outfeed", "infeed", "xla_python_cpu_callback",
+                 "host_callback", "SendToHost", "RecvFromHost")
+    hits = [l for l in hlo_on.splitlines()
+            if any(tok in l for tok in forbidden)]
+    assert hits == [], f"host-transfer ops in compiled chunk: {hits[:5]}"
+
+
+def test_telemetry_totals_reduction_is_transfer_free(engine):
+    """The one device-side observability signal — the [3] totals the
+    boundary fold diffs — must itself lower without host callbacks."""
+    txt = engine._tel_totals.lower(engine.init_state(4).telemetry) \
+        .compile().as_text()
+    assert "outfeed" not in txt and "infeed" not in txt
+    assert "xla_python_cpu_callback" not in txt
+
+
+# ----------------------------------------------- counter/ServeStats parity
+
+@pytest.mark.parametrize("cap,chunk,max_steps", [
+    (3, 4, None),     # chunked, multiple admission waves
+    (2, 2, None),     # chunked, tiny chunks
+    (4, 8, None),     # chunked, whole-utterance chunks
+    (3, 0, None),     # per-frame path
+    (2, 4, 6),        # truncated by max_steps mid-run
+])
+def test_counters_match_servestats(engine, workload, cap, chunk, max_steps):
+    """The live counters and `ServeStats` are two views of one run and
+    must agree EXACTLY: dispatches, frames, and delivered results split
+    by the same `truncated` flag."""
+    obs = PoolObservability()
+    results, stats = serve_requests(engine, _requests(workload),
+                                    capacity=cap, chunk_frames=chunk,
+                                    max_steps=max_steps, observability=obs)
+    n_trunc = sum(1 for r in results if r.truncated)
+    assert obs.c_dispatches.value == stats.n_dispatches
+    assert obs.c_frames.value == stats.total_frames
+    assert obs.c_completed.value == len(results) - n_trunc
+    assert obs.c_truncated.value == n_trunc
+    assert obs.c_admissions.value == len(results)
+    if max_steps is not None:
+        assert stats.truncated and n_trunc > 0
+    # one time-series sample per dispatch boundary:
+    assert obs.timeseries.n_appended == stats.n_dispatches
+    samples = obs.timeseries.snapshot()
+    assert sum(s["frames"] for s in samples) == stats.total_frames
+    assert sum(s["admissions"] for s in samples) == len(results)
+    # retirements land in the boundary that RESOLVED them; results still
+    # pending at the final flush() surface outside any dispatch boundary:
+    assert sum(s["retirements"] for s in samples) <= len(results)
+
+
+def test_observability_does_not_change_results(engine, workload):
+    """Logits with observability attached are bit-identical to without."""
+    res_off, _ = serve_requests(engine, _requests(workload), capacity=3,
+                                chunk_frames=4)
+    res_on, _ = serve_requests(engine, _requests(workload), capacity=3,
+                               chunk_frames=4,
+                               observability=PoolObservability())
+    for a, b in zip(sorted(res_off, key=lambda r: r.req_id),
+                    sorted(res_on, key=lambda r: r.req_id)):
+        np.testing.assert_array_equal(a.logits, b.logits)
+
+
+def test_incremental_sparsity_converges_to_measured(engine, workload):
+    """The boundary-diffed running totals telescope to the run's
+    cumulative measured sparsity: after `flush_totals` resolves the tail
+    window, the accumulated [nnz/cols, overflow, steps] must reproduce
+    `stats.sparsity` exactly — and every per-window increment in the
+    time series is a valid sparsity with sample weights that sum to at
+    most the run total (the tail window resolves after the last
+    boundary, outside the ring)."""
+    obs = PoolObservability()
+    _, stats = serve_requests(engine, _requests(workload), capacity=4,
+                              chunk_frames=4, observability=obs)
+    tot = obs._last_totals          # flushed by serve_requests
+    assert tot[2] > 0
+    assert 1.0 - tot[0] / tot[2] == pytest.approx(
+        stats.sparsity["temporal_sparsity"], abs=1e-9)
+    assert tot[1] / tot[2] == pytest.approx(
+        stats.sparsity["capacity_overflow_rate"], abs=1e-9)
+    samples = obs.timeseries.snapshot()
+    w = np.array([s["samples_inc"] for s in samples])
+    sp = np.array([s["temporal_sparsity_inc"] for s in samples])
+    assert w.sum() > 0
+    assert w.sum() <= tot[2]
+    assert ((0.0 <= sp) & (sp <= 1.0)).all()
+
+
+def test_idle_pool_sparsity_summary(engine):
+    """Satellite regression at the pool level: a pool that never stepped
+    reports the full zeroed sparsity key set, not {}."""
+    from repro.serving.telemetry import measured_sparsity
+    state = engine.init_state(4)
+    summ = measured_sparsity(state.telemetry, engine.n_cols)
+    assert summ == {"temporal_sparsity": 0.0,
+                    "capacity_overflow_rate": 0.0,
+                    "mean_active_columns": 0.0}
+
+
+# ------------------------------------------- bench report schema stamping
+
+def _load_bench_module():
+    import importlib.util
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        "serving_bench", os.path.join(root, "benchmarks",
+                                      "serving_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_writer_stamps_and_refuses_mixed_schemas(tmp_path):
+    """BENCH_serving.json carries one schema_version on the report and on
+    every row; a row from a different schema refuses to write rather
+    than producing a half-old, half-new file."""
+    sb = _load_bench_module()
+    path = tmp_path / "BENCH.json"
+    sb._write_report(str(path), {"leg": {"frames_per_s": 1.0}})
+    doc = json.loads(path.read_text())
+    assert doc["schema_version"] == sb.SCHEMA_VERSION
+    assert doc["leg"]["schema_version"] == sb.SCHEMA_VERSION
+
+    stale_row = {"leg": {"schema_version": sb.SCHEMA_VERSION - 1}}
+    with pytest.raises(ValueError, match="refusing to mix"):
+        sb._write_report(str(path), stale_row)
+    stale_top = {"schema_version": sb.SCHEMA_VERSION + 1}
+    with pytest.raises(ValueError, match="refusing to mix"):
+        sb._write_report(str(path), stale_top)
+    # current-version stamps pass through idempotently:
+    sb._write_report(str(path), doc)
+
+
+# --------------------------------------------- tracer + admin end-to-end
+
+FIVE_PHASES = {"admission_upload", "dispatch", "snapshot_fetch",
+               "delivery_pump", "pacing_idle"}
+
+
+async def _admin_query(reader, writer, msg):
+    writer.write((json.dumps(msg) + "\n").encode())
+    await writer.drain()
+    return json.loads(await reader.readline())
+
+
+def test_async_trace_and_admin_endpoint(engine, workload):
+    """One live async run, under client load, covering the tentpole's
+    operator surface end to end: the tracer records all five tick-loop
+    phases as loadable Chrome trace JSON, and the admin endpoint answers
+    healthz/stats/metrics/timeseries (plus in-band errors) while the
+    pool is actively serving."""
+    from repro.launch.serve import start_admin_server
+
+    obs = PoolObservability(tracer=Tracer(enabled=True))
+
+    async def client(server, feats):
+        handle = await server.stream(want_partials=True)
+        for j in range(0, len(feats), 3):
+            await handle.send(feats[j:j + 3])
+            await asyncio.sleep(0)
+        handle.close()
+        async for _ in handle:
+            pass
+        return await handle.result()
+
+    async def run():
+        async with AsyncSpartusServer(engine, capacity=3, chunk_frames=4,
+                                      observability=obs) as server:
+            admin = await start_admin_server(server, obs, port=0)
+            port = admin.sockets[0].getsockname()[1]
+            tasks = [asyncio.ensure_future(client(server, f))
+                     for f in workload[:6]]
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+            # query every command while clients are mid-stream:
+            health = await _admin_query(reader, writer, {"cmd": "healthz"})
+            stats = await _admin_query(reader, writer, {"cmd": "stats"})
+            await _admin_query(reader, writer, {"cmd": "metrics"})
+            results = await asyncio.gather(*tasks)
+            # re-scrape after the load completes, so counter assertions
+            # below see the whole run:
+            metrics = await _admin_query(reader, writer, {"cmd": "metrics"})
+            ts = await _admin_query(reader, writer,
+                                    {"cmd": "timeseries", "last": 4})
+            bad = await _admin_query(reader, writer, {"cmd": "nope"})
+            not_obj = await _admin_query(reader, writer, [1, 2])
+            writer.close()
+            admin.close()
+            await admin.wait_closed()
+            return health, stats, metrics, ts, bad, not_obj, results
+
+    health, stats, metrics, ts, bad, not_obj, results = asyncio.run(run())
+
+    assert health["ok"] is True and health["capacity"] == 3
+    assert "n_dispatches" in stats["stats"]
+    assert metrics["metrics"]["spartus_dispatches_total"]["value"] > 0
+    assert "# TYPE spartus_frames_total counter" in metrics["prometheus"]
+    assert len(ts["timeseries"]) <= 4 and ts["n_appended"] > 0
+    for s in ts["timeseries"]:
+        assert {"chunk", "occupancy", "frames", "dispatch_s",
+                "temporal_sparsity_inc"} <= set(s)
+    assert "error" in bad and "error" in not_obj
+    assert len(results) == 6 and all(r.logits.size for r in results)
+    # the delivered-result counters agree with what the clients saw:
+    assert obs.c_completed.value == 6.0
+    # all five driver phases traced, and the trace round-trips as JSON:
+    doc = json.loads(obs.tracer.to_json())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert FIVE_PHASES <= names, f"missing phases: {FIVE_PHASES - names}"
+    assert all(e["ph"] in ("X", "i") for e in doc["traceEvents"])

@@ -1,0 +1,135 @@
+"""Edge-case tests for repro.serving.telemetry: float32 accumulator
+saturation, the fused-vs-per-layer accumulate equivalence under masking,
+empty-sample reductions, and the fold_totals/measured_sparsity contract
+the observability layer diffs against."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.telemetry import (
+    TelemetryState,
+    accumulate,
+    accumulate_layers,
+    fold_totals,
+    init_telemetry,
+    measured_sparsity,
+    percentile_summary,
+)
+
+
+def _state(nnz, ovf, steps):
+    return TelemetryState(
+        nnz_sum=jnp.asarray(nnz, jnp.float32),
+        overflow_steps=jnp.asarray(ovf, jnp.float32),
+        steps=jnp.asarray(steps, jnp.float32),
+    )
+
+
+# -------------------------------------------------- float32 counter bounds
+
+def test_float32_steps_exact_below_2_24():
+    """Counts are exact integers up to 2^24 (the documented float32
+    contract): one more step from 2^24 - 1 lands exactly on 2^24."""
+    big = float(2 ** 24 - 1)
+    tel = _state([[0.0]], [[0.0]], [[big]])
+    tel = accumulate(tel, 0, jnp.array([0], jnp.int32),
+                     jnp.array([0], jnp.int32), jnp.array([True]))
+    assert float(tel.steps[0, 0]) == float(2 ** 24)
+
+
+def test_float32_steps_round_beyond_2_24():
+    """Past 2^24 single increments round away (2^24 + 1 is not a
+    float32) — the accumulator stays finite and monotone rather than
+    wrapping like an int32 would, and the summary ratios stay sane."""
+    at_cap = float(2 ** 24)
+    tel = _state([[at_cap / 2]], [[0.0]], [[at_cap]])
+    tel = accumulate(tel, 0, jnp.array([1], jnp.int32),
+                     jnp.array([0], jnp.int32), jnp.array([True]))
+    assert float(tel.steps[0, 0]) == at_cap          # +1 rounded away
+    summ = measured_sparsity(tel, n_cols=[1])
+    assert summ["temporal_sparsity"] == pytest.approx(0.5, abs=1e-6)
+    assert np.isfinite(list(summ.values())).all()
+
+
+# ------------------------------------- fused vs per-layer accumulate paths
+
+def test_accumulate_layers_matches_per_layer_on_masked_slots():
+    """accumulate_layers (one [L, B] slab add per step) must fold exactly
+    what L accumulate() calls fold — including inactive slots, whose
+    columns must not move."""
+    L, B = 3, 5
+    rng = np.random.default_rng(0)
+    nnz = rng.integers(0, 50, (L, B)).astype(np.int32)
+    dropped = rng.integers(0, 2, (L, B)).astype(np.int32)
+    active = np.array([True, False, True, True, False])
+
+    t_fused = init_telemetry(L, B)
+    t_loop = init_telemetry(L, B)
+    t_fused = accumulate_layers(t_fused, jnp.asarray(nnz),
+                                jnp.asarray(dropped), jnp.asarray(active))
+    for layer in range(L):
+        t_loop = accumulate(t_loop, layer, jnp.asarray(nnz[layer]),
+                            jnp.asarray(dropped[layer]), jnp.asarray(active))
+    for a, b in zip(t_fused, t_loop):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # masked slots stayed identically zero:
+    np.testing.assert_array_equal(np.asarray(t_fused.steps)[:, ~active],
+                                  0.0)
+
+
+def test_accumulate_layers_all_inactive_is_identity():
+    L, B = 2, 3
+    tel = init_telemetry(L, B)
+    out = accumulate_layers(tel, jnp.ones((L, B), jnp.int32),
+                            jnp.ones((L, B), jnp.int32),
+                            jnp.zeros((B,), bool))
+    for a in out:
+        np.testing.assert_array_equal(np.asarray(a), 0.0)
+
+
+# ------------------------------------------------------ empty-sample paths
+
+def test_percentile_summary_empty_and_singleton():
+    empty = percentile_summary([], "latency_s")
+    assert empty == {"p50_latency_s": 0.0, "p95_latency_s": 0.0,
+                     "p99_latency_s": 0.0}
+    one = percentile_summary([0.125], "wait_s")
+    assert one == {"p50_wait_s": 0.125, "p95_wait_s": 0.125,
+                   "p99_wait_s": 0.125}
+
+
+def test_measured_sparsity_zero_steps_returns_full_zeroed_keys():
+    """Regression: an idle pool (steps.sum() == 0) must return the full
+    key set zeroed, not {} — callers index the summary unconditionally,
+    matching percentile_summary's empty contract."""
+    tel = init_telemetry(2, 4)
+    summ = measured_sparsity(tel, n_cols=[8, 8])
+    assert summ == {"temporal_sparsity": 0.0,
+                    "capacity_overflow_rate": 0.0,
+                    "mean_active_columns": 0.0}
+
+
+# ------------------------------------- fold_totals vs measured_sparsity
+
+def test_fold_totals_matches_measured_sparsity():
+    """The jitted [3] reduction the observability layer diffs must carry
+    exactly the numbers measured_sparsity reduces host-side."""
+    L, B = 2, 3
+    rng = np.random.default_rng(1)
+    tel = _state(rng.integers(0, 100, (L, B)),
+                 rng.integers(0, 5, (L, B)),
+                 rng.integers(1, 20, (L, B)))
+    cols = [16, 32]
+    tot = np.asarray(jax.jit(lambda t: fold_totals(t, cols))(tel),
+                     np.float64)
+    summ = measured_sparsity(tel, cols)
+    steps = tot[2]
+    assert summ["temporal_sparsity"] == pytest.approx(1.0 - tot[0] / steps)
+    assert summ["capacity_overflow_rate"] == pytest.approx(tot[1] / steps)
+
+
+def test_fold_totals_zero_state():
+    tel = init_telemetry(2, 2)
+    tot = np.asarray(fold_totals(tel, [4, 4]))
+    np.testing.assert_array_equal(tot, 0.0)
