@@ -1,0 +1,54 @@
+"""Static analysis for the serving hot paths.
+
+Two layers (see docs/contracts.md):
+
+* ``contracts``/``cases``/``hlo`` — compile-time contract checking: each
+  hot-path function declares its invariants with ``@hotpath_contract``;
+  ``ContractCase``s lower it under representative shapes and the checker
+  asserts the optimized HLO (no collectives, no host transfers, donation
+  honoured, f32 ceiling, op budgets).
+* ``lint`` — repo-specific AST rules encoding bugs already paid for
+  (iota-gather, eager-scatter, aliased-donation, blocking-in-driver,
+  wallclock-in-jit).
+
+CLI: ``python -m tools.lint --contracts --ast``.
+"""
+from .contracts import (  # noqa: F401
+    ContractReport,
+    HotpathContract,
+    Violation,
+    check_case,
+    check_cases,
+    check_hlo,
+    get_contract,
+    hotpath_contract,
+    registered_contracts,
+    run_donation_probe,
+)
+from .lint import (  # noqa: F401
+    LintFinding,
+    RULES,
+    RULE_NAMES,
+    lint_repo,
+    lint_source,
+)
+from . import hlo  # noqa: F401
+
+__all__ = [
+    "ContractReport",
+    "HotpathContract",
+    "Violation",
+    "check_case",
+    "check_cases",
+    "check_hlo",
+    "get_contract",
+    "hotpath_contract",
+    "registered_contracts",
+    "run_donation_probe",
+    "LintFinding",
+    "RULES",
+    "RULE_NAMES",
+    "lint_repo",
+    "lint_source",
+    "hlo",
+]

@@ -1,0 +1,315 @@
+"""Compile-time contracts for the serving hot paths.
+
+A *contract* is a set of invariants a jitted function must satisfy in
+its compiled form: no collectives, no host transfers, donation actually
+honoured, float32 ceiling, per-op budgets.  Functions declare their
+contract with the :func:`hotpath_contract` decorator; a
+:class:`ContractCase` (see ``repro.analysis.cases``) supplies
+representative arguments so the checker can lower, compile and inspect
+the real HLO.  ``check_case`` then asserts every clause against the
+optimized module text and — for donation — against an actual execution,
+because the "same buffer donated twice" failure mode (the
+``init_telemetry`` aliasing bug from PR 2) is only detectable at run
+time: the compile-time alias map still lists every donated leaf as
+``may-alias`` even when two params share one buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from . import hlo
+
+
+@dataclasses.dataclass(frozen=True)
+class HotpathContract:
+    """Declared invariants for one hot-path function.
+
+    Attributes:
+      name: registry key; also how cases refer back to the contract.
+      no_collectives: compiled module must contain no cross-device
+        communication ops (``hlo.COLLECTIVE_TOKENS``).
+      no_host_transfers: compiled module must contain no outfeed/infeed/
+        host-callback ops (``hlo.HOST_TRANSFER_TOKENS``).
+      donates: names of the logical arguments expected to be donated.
+        Purely documentary for the static pass; the case supplies the
+        concrete donated-leaf count to compare against the alias map.
+      max_dtype: widest floating dtype permitted in the compiled module.
+      forbid_ops: op families that must not appear at all (e.g.
+        ``("transpose",)`` for paths that consume pre-transposed mirrors).
+      op_budget: per-op-family ceilings, e.g. at most one
+        ``dynamic-update-slice`` for a banked-row write.
+    """
+
+    name: str
+    no_collectives: bool = True
+    no_host_transfers: bool = True
+    donates: Tuple[str, ...] = ()
+    max_dtype: str = "float32"
+    forbid_ops: Tuple[str, ...] = ()
+    op_budget: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+
+# Global registry: contract name -> HotpathContract.  Decorating a
+# function registers it here; cases look contracts up by name so the
+# checker works even for bound methods whose jitted wrapper is created
+# per-instance (BatchedSpartusEngine jits in __init__).
+_REGISTRY: Dict[str, HotpathContract] = {}
+
+
+def hotpath_contract(
+    name: str,
+    *,
+    no_collectives: bool = True,
+    no_host_transfers: bool = True,
+    donates: Sequence[str] = (),
+    max_dtype: str = "float32",
+    forbid_ops: Sequence[str] = (),
+    op_budget: Optional[Mapping[str, int]] = None,
+) -> Callable[[Any], Any]:
+    """Declare and register a contract; returns the function unchanged.
+
+    Stacks on top of ``jax.jit``-wrapped callables (PjitFunction accepts
+    attribute assignment) and on plain methods that get jitted later.
+    Re-registering the same name with identical clauses is a no-op;
+    conflicting re-registration raises, so two modules cannot silently
+    fight over one contract.
+    """
+    contract = HotpathContract(
+        name=name,
+        no_collectives=no_collectives,
+        no_host_transfers=no_host_transfers,
+        donates=tuple(donates),
+        max_dtype=max_dtype,
+        forbid_ops=tuple(forbid_ops),
+        op_budget=dict(op_budget or {}),
+    )
+    existing = _REGISTRY.get(name)
+    if existing is not None and existing != contract:
+        raise ValueError(
+            f"hotpath_contract {name!r} already registered with different "
+            f"clauses: {existing} vs {contract}"
+        )
+    _REGISTRY[name] = contract
+
+    def deco(fn: Any) -> Any:
+        try:
+            fn.__hotpath_contract__ = contract
+        except (AttributeError, TypeError):  # exotic callables: registry only
+            pass
+        return fn
+
+    return deco
+
+
+def get_contract(name: str) -> HotpathContract:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no hotpath contract named {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_contracts() -> Dict[str, HotpathContract]:
+    return dict(_REGISTRY)
+
+
+@dataclasses.dataclass
+class Violation:
+    contract: str
+    clause: str
+    message: str
+
+    def __str__(self) -> str:  # pragma: no cover - repr convenience
+        return f"[{self.contract}] {self.clause}: {self.message}"
+
+
+@dataclasses.dataclass
+class ContractReport:
+    """Result of checking one case against its contract."""
+
+    case: str
+    contract: str
+    violations: List[Violation]
+    op_histogram: Dict[str, int]
+    alias_entries: int
+    donated_leaves: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        status = "OK" if self.ok else f"FAIL ({len(self.violations)})"
+        return f"{self.case:<40s} {status}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "case": self.case,
+            "contract": self.contract,
+            "ok": self.ok,
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+            "op_histogram": dict(self.op_histogram),
+            "alias_entries": self.alias_entries,
+            "donated_leaves": self.donated_leaves,
+        }
+
+
+def check_hlo(
+    contract: HotpathContract,
+    hlo_text: str,
+    *,
+    donated_leaves: int = 0,
+) -> List[Violation]:
+    """Run every static clause of ``contract`` against optimized HLO text."""
+    out: List[Violation] = []
+
+    def add(clause: str, message: str) -> None:
+        out.append(Violation(contract.name, clause, message))
+
+    if contract.no_collectives:
+        hits = hlo.collective_lines(hlo_text)
+        if hits:
+            add(
+                "no_collectives",
+                f"{len(hits)} collective op line(s), e.g. {hits[0].strip()!r}",
+            )
+    if contract.no_host_transfers:
+        hits = hlo.host_transfer_lines(hlo_text)
+        if hits:
+            add(
+                "no_host_transfers",
+                f"{len(hits)} host-transfer line(s), e.g. {hits[0].strip()!r}",
+            )
+    dtype_hits = hlo.dtype_violation_lines(hlo_text, contract.max_dtype)
+    if dtype_hits:
+        add(
+            "max_dtype",
+            f"{len(dtype_hits)} line(s) exceed {contract.max_dtype}, "
+            f"e.g. {dtype_hits[0].strip()!r}",
+        )
+
+    histogram = hlo.op_histogram(hlo_text)
+    for op in contract.forbid_ops:
+        n = histogram.get(op, 0)
+        if n:
+            add("forbid_ops", f"forbidden op {op!r} appears {n} time(s)")
+    for op, budget in contract.op_budget.items():
+        n = histogram.get(op, 0)
+        if n > budget:
+            add("op_budget", f"op {op!r} appears {n} time(s), budget {budget}")
+
+    if donated_leaves:
+        entries = hlo.alias_count(hlo_text)
+        if entries < donated_leaves:
+            add(
+                "donation",
+                f"only {entries}/{donated_leaves} donated leaves aliased in "
+                "the compiled module (donation dropped at compile time)",
+            )
+    return out
+
+
+def _donated_leaves_deleted(leaves: Sequence[Any]) -> Tuple[int, int]:
+    """(deleted, total) across donated argument leaves after execution."""
+    deleted = 0
+    total = 0
+    for leaf in leaves:
+        if isinstance(leaf, jax.Array):
+            total += 1
+            if leaf.is_deleted():
+                deleted += 1
+    return deleted, total
+
+
+def run_donation_probe(
+    contract_name: str,
+    fn: Callable[..., Any],
+    args: Tuple[Any, ...],
+    kwargs: Mapping[str, Any],
+    donated_args: Sequence[Any],
+) -> List[Violation]:
+    """Execute ``fn`` once and verify donation really happened.
+
+    Catches the runtime-only failure modes the alias map cannot show:
+
+    * one buffer bound into two donated params -> XLA raises
+      ``Attempt to donate the same buffer twice in Execute()``;
+    * donation silently rejected -> donated input leaves survive
+      (``is_deleted()`` stays False) and the step double-buffers.
+
+    ``args`` must be fresh (not shared with a live pool): a successful
+    probe consumes them.
+    """
+    out: List[Violation] = []
+    try:
+        result = fn(*args, **kwargs)
+        jax.block_until_ready(result)
+    except Exception as e:
+        # The aliased-input failure surfaces as ValueError or
+        # XlaRuntimeError depending on the dispatch path; either way the
+        # message names donation ("Attempt to donate the same buffer
+        # twice in Execute()").  Anything else is a genuine error.
+        if "donat" not in str(e).lower():
+            raise
+        out.append(
+            Violation(
+                contract_name,
+                "donation",
+                f"execution with donated buffers failed: {e}",
+            )
+        )
+        return out
+    leaves = jax.tree_util.tree_leaves(list(donated_args))
+    deleted, total = _donated_leaves_deleted(leaves)
+    if deleted < total:
+        out.append(
+            Violation(
+                contract_name,
+                "donation",
+                f"only {deleted}/{total} donated input leaves were consumed; "
+                "donation was rejected at run time",
+            )
+        )
+    return out
+
+
+def check_case(case: "ContractCase") -> ContractReport:  # noqa: F821
+    """Lower, compile and check one registered case end to end."""
+    contract = get_contract(case.contract)
+    override = getattr(case, "op_budget_override", None)
+    if override:
+        contract = dataclasses.replace(
+            contract, op_budget={**contract.op_budget, **override})
+    built = case.build()
+    text = hlo.compiled_text(built.fn, *built.args, **built.kwargs)
+    donated_leaves = built.donated_leaf_count()
+    violations = check_hlo(contract, text, donated_leaves=donated_leaves)
+    if donated_leaves and case.run_donation_probe and not violations:
+        # Fresh arguments: the probe consumes donated buffers.
+        probe = case.build()
+        violations.extend(
+            run_donation_probe(
+                contract.name,
+                probe.fn,
+                probe.args,
+                probe.kwargs,
+                probe.donated_args(),
+            )
+        )
+    return ContractReport(
+        case=case.name,
+        contract=contract.name,
+        violations=violations,
+        op_histogram=dict(hlo.op_histogram(text)),
+        alias_entries=hlo.alias_count(text),
+        donated_leaves=donated_leaves,
+    )
+
+
+def check_cases(cases: Sequence["ContractCase"]) -> List[ContractReport]:  # noqa: F821
+    return [check_case(c) for c in cases]

@@ -1,0 +1,374 @@
+"""Repo-specific AST lint rules.
+
+Each rule encodes a bug this repo has already paid for; the docstring of
+every rule names the incident.  The pass is deliberately shallow — plain
+``ast`` walks, no type inference — because each rule targets one
+syntactic shape with a known safe alternative.  False positives are
+silenced in place with a pragma comment on the offending line (or the
+line above)::
+
+    x = buf.at[i].set(v)  # lint: allow(eager-scatter) staged upload, outside jit
+
+Run via ``python -m tools.lint --ast`` or the ``tests/test_contracts.py``
+suite; both lint every ``.py`` file under ``src/`` and ``tools/``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+_PRAGMA_RE = re.compile(r"lint:\s*allow\(([a-z0-9\-,\s]+)\)")
+
+# Attribute roots that mark a call as "array construction" for the
+# aliased-donation rule: one buffer built once and bound into several
+# donated fields rejects donation at run time.
+_ALLOC_FNS = {"zeros", "ones", "full", "empty", "zeros_like", "ones_like",
+              "full_like", "empty_like"}
+
+# Calls that force a device->host sync when applied to device values.
+_BLOCKING_ATTRS = {"block_until_ready", "device_get", "asarray", "item"}
+
+_WALLCLOCK_ATTRS = {"time", "perf_counter", "monotonic", "process_time"}
+
+
+@dataclasses.dataclass
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str
+    doc: str
+    applies_to: Callable[[str], bool]
+    check: Callable[[ast.AST, str], List["_RawHit"]]
+
+
+@dataclasses.dataclass
+class _RawHit:
+    line: int
+    message: str
+
+
+def _attr_name(node: ast.AST) -> Optional[str]:
+    """Trailing attribute/function name of a call target, if any."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    """True if any decorator mentions ``jit`` (covers ``@jax.jit``,
+    ``@functools.partial(jax.jit, ...)`` and bare ``@jit``)."""
+    for deco in getattr(fn, "decorator_list", ()):
+        for node in ast.walk(deco):
+            name = _attr_name(node)
+            if name == "jit":
+                return True
+    return False
+
+
+def _has_contract_decorator(fn: ast.AST) -> bool:
+    for deco in getattr(fn, "decorator_list", ()):
+        for node in ast.walk(deco):
+            if _attr_name(node) == "hotpath_contract":
+                return True
+    return False
+
+
+def _enclosing_functions(tree: ast.AST) -> Dict[ast.AST, Optional[ast.AST]]:
+    """Map every node to its innermost enclosing function def (or None)."""
+    parent: Dict[ast.AST, Optional[ast.AST]] = {}
+
+    def visit(node: ast.AST, fn: Optional[ast.AST]) -> None:
+        parent[node] = fn
+        inner = node if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) else fn
+        for child in ast.iter_child_nodes(node):
+            visit(child, inner)
+
+    visit(tree, None)
+    return parent
+
+
+# -- rule: iota-gather --------------------------------------------------------
+
+
+def _check_iota_gather(tree: ast.AST, src: str) -> List[_RawHit]:
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Subscript):
+            continue
+        # `.at[...]` updates are the scatter API, not a gather.
+        if isinstance(node.value, ast.Attribute) and node.value.attr == "at":
+            continue
+        sl = node.slice
+        elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+        for e in elts:
+            if isinstance(e, ast.Call) and _attr_name(e.func) == "arange":
+                hits.append(_RawHit(
+                    node.lineno,
+                    "batch-iota advanced indexing (`x[arange(B), i]`); use "
+                    "`jnp.take_along_axis` — the iota form made GSPMD "
+                    "insert an all-gather + all-reduce per scan iteration "
+                    "on the sharded pool (see ops.gather_frames)"))
+                break
+    return hits
+
+
+# -- rule: eager-scatter ------------------------------------------------------
+
+
+def _check_eager_scatter(tree: ast.AST, src: str) -> List[_RawHit]:
+    hits = []
+    enclosing = _enclosing_functions(tree)
+    for node in ast.walk(tree):
+        # shape: <expr>.at[...].set(...) / .add(...) / ...
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set", "add", "mul", "min", "max",
+                                       "divide", "power")
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            continue
+        fn = enclosing.get(node)
+        while isinstance(fn, ast.Lambda):
+            fn = enclosing.get(fn)
+        if fn is not None and (_is_jit_decorated(fn)
+                               or _has_contract_decorator(fn)):
+            continue
+        hits.append(_RawHit(
+            node.lineno,
+            f"`.at[].{node.func.attr}` in a function without a jit "
+            "decorator: eager functional updates copy the whole buffer "
+            "per call on the serving host path; move it under jit or "
+            "mark the staging intent with a pragma"))
+    return hits
+
+
+# -- rule: aliased-donation ---------------------------------------------------
+
+
+def _check_aliased_donation(tree: ast.AST, src: str) -> List[_RawHit]:
+    """One array literal bound into multiple args of one constructor call.
+
+    The init_telemetry bug: ``z = jnp.zeros(...)`` passed as all three
+    TelemetryState fields made XLA reject donation of the whole state at
+    run time ("attempt to donate the same buffer twice")."""
+    hits = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        alloc_vars: Set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and _attr_name(node.value.func) in _ALLOC_FNS):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        alloc_vars.add(tgt.id)
+        if not alloc_vars:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            uses: Dict[str, int] = {}
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in alloc_vars:
+                    uses[arg.id] = uses.get(arg.id, 0) + 1
+            for var, n in uses.items():
+                if n >= 2:
+                    hits.append(_RawHit(
+                        node.lineno,
+                        f"array buffer {var!r} bound into {n} fields of one "
+                        "call: a pytree whose leaves share a buffer rejects "
+                        "donation at run time (the init_telemetry bug); "
+                        "allocate one buffer per field"))
+    return hits
+
+
+# -- rule: blocking-in-driver -------------------------------------------------
+
+
+def _check_blocking_in_driver(tree: ast.AST, src: str) -> List[_RawHit]:
+    """Sync points inside async driver coroutines.
+
+    The async front-end overlaps host scheduling with device compute;
+    one ``block_until_ready``/``np.asarray``/``float(device_val)`` in a
+    coroutine serialises the whole event loop against the device."""
+    hits = []
+    enclosing = _enclosing_functions(tree)
+
+    def innermost_def(node: ast.AST) -> Optional[ast.AST]:
+        fn = enclosing.get(node)
+        while isinstance(fn, ast.Lambda):
+            fn = enclosing.get(fn)
+        return fn
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = innermost_def(node)
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            continue
+        name = _attr_name(node.func)
+        if name in _BLOCKING_ATTRS:
+            hits.append(_RawHit(
+                node.lineno,
+                f"`{name}` inside coroutine `{fn.name}`: host-syncs the "
+                "event loop against the device; dispatch instead and fetch "
+                "via the boundary snapshot path (or run in an executor)"))
+        elif (isinstance(node.func, ast.Name) and node.func.id == "float"
+              and node.args
+              and isinstance(node.args[0], (ast.Subscript, ast.Attribute,
+                                            ast.Call))):
+            hits.append(_RawHit(
+                node.lineno,
+                f"`float(...)` on a computed value inside coroutine "
+                f"`{fn.name}`: if the operand is a device array this is a "
+                "hidden blocking transfer; fetch at chunk boundaries"))
+    return hits
+
+
+# -- rule: wallclock-in-jit ---------------------------------------------------
+
+
+def _check_wallclock_in_jit(tree: ast.AST, src: str) -> List[_RawHit]:
+    """``time.time()`` (and friends) reachable from traced code.
+
+    Wall-clock reads inside a traced function execute once at trace time
+    and bake a constant into the compiled step — timing must live on the
+    host side of the dispatch boundary (see serving/observability.py)."""
+    fns: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fns.setdefault(node.name, node)
+
+    def wallclock_hits(fn: ast.AST) -> List[_RawHit]:
+        out = []
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _WALLCLOCK_ATTRS
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in ("time", "datetime")):
+                out.append(_RawHit(
+                    node.lineno,
+                    f"`time.{node.func.attr}()` reachable from traced code "
+                    "(baked in as a trace-time constant); time on the host "
+                    "side of the dispatch boundary instead"))
+        return out
+
+    def callees(fn: ast.AST) -> Iterable[str]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = _attr_name(node.func)
+                if name in fns:
+                    yield name
+
+    hits = []
+    roots = [fn for fn in fns.values()
+             if _is_jit_decorated(fn) or _has_contract_decorator(fn)]
+    seen: Set[str] = set()
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        if fn.name in seen:
+            continue
+        seen.add(fn.name)
+        hits.extend(wallclock_hits(fn))
+        frontier.extend(fns[c] for c in callees(fn) if c not in seen)
+    return hits
+
+
+def _under(*parts: str) -> Callable[[str], bool]:
+    def pred(path: str) -> bool:
+        p = path.replace("\\", "/")
+        return any(part in p for part in parts)
+    return pred
+
+
+RULES: List[Rule] = [
+    Rule("iota-gather", _check_iota_gather.__doc__ or "",
+         _under("src/", "tools/"), _check_iota_gather),
+    Rule("eager-scatter", _check_eager_scatter.__doc__ or "",
+         _under("src/repro/serving/"), _check_eager_scatter),
+    Rule("aliased-donation", _check_aliased_donation.__doc__ or "",
+         _under("src/", "tools/"), _check_aliased_donation),
+    Rule("blocking-in-driver", _check_blocking_in_driver.__doc__ or "",
+         _under("src/repro/serving/async_server.py",
+                "src/repro/serving/scheduler.py"),
+         _check_blocking_in_driver),
+    Rule("wallclock-in-jit", _check_wallclock_in_jit.__doc__ or "",
+         _under("src/", "tools/"), _check_wallclock_in_jit),
+]
+
+RULE_NAMES = tuple(r.name for r in RULES)
+
+
+def _allowed_rules(src_lines: Sequence[str], line: int) -> Set[str]:
+    """Pragma rules in force at 1-indexed ``line`` (same line or above)."""
+    allowed: Set[str] = set()
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(src_lines):
+            m = _PRAGMA_RE.search(src_lines[ln - 1])
+            if m:
+                allowed.update(s.strip() for s in m.group(1).split(","))
+    return allowed
+
+
+def lint_source(src: str, path: str,
+                rules: Optional[Sequence[Rule]] = None) -> List[LintFinding]:
+    """Lint one source string as if it lived at ``path``."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, "syntax",
+                            f"unparseable: {e.msg}")]
+    src_lines = src.splitlines()
+    findings = []
+    for rule in (RULES if rules is None else rules):
+        if not rule.applies_to(path):
+            continue
+        for hit in rule.check(tree, src):
+            if rule.name in _allowed_rules(src_lines, hit.line):
+                continue
+            findings.append(LintFinding(path, hit.line, rule.name,
+                                        hit.message))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_paths(paths: Iterable[Path],
+               root: Optional[Path] = None) -> List[LintFinding]:
+    findings = []
+    for p in paths:
+        rel = str(p.relative_to(root)) if root else str(p)
+        findings.extend(lint_source(p.read_text(), rel))
+    return findings
+
+
+def repo_files(root: Path) -> List[Path]:
+    """The files the repo lints: every .py under src/ and tools/."""
+    out: List[Path] = []
+    for sub in ("src", "tools"):
+        base = root / sub
+        if base.is_dir():
+            out.extend(sorted(base.rglob("*.py")))
+    return out
+
+
+def lint_repo(root: Path) -> List[LintFinding]:
+    return lint_paths(repo_files(root), root=root)

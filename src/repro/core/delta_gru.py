@@ -65,15 +65,19 @@ def gru_step(params: Params, h: jax.Array, x: jax.Array) -> jax.Array:
 def init_delta_gru_state(
     input_dim: int, hidden_dim: int, params: Optional[Params] = None, dtype=jnp.float32
 ) -> DeltaGRUState:
-    z = jnp.zeros((hidden_dim,), dtype)
+    # one buffer per field: leaves sharing a buffer reject donation if the
+    # state is ever passed through a donating entry point
+    def z() -> jnp.ndarray:
+        return jnp.zeros((hidden_dim,), dtype)
+
     if params is not None:
         b_x, b_h = params["b_x"].astype(dtype), params["b_h"].astype(dtype)
         m_r, m_u = b_x[0] + b_h[0], b_x[1] + b_h[1]
         m_xc, m_hc = b_x[2], b_h[2]
     else:
-        m_r = m_u = m_xc = m_hc = z
+        m_r, m_u, m_xc, m_hc = z(), z(), z(), z()
     return DeltaGRUState(
-        h=z, x_hat=jnp.zeros((input_dim,), dtype), h_hat=z,
+        h=z(), x_hat=jnp.zeros((input_dim,), dtype), h_hat=z(),
         m_r=m_r, m_u=m_u, m_xc=m_xc, m_hc=m_hc,
     )
 

@@ -11,11 +11,10 @@ actual delta masks / weight masks of the JAX model:
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def temporal_sparsity(delta_masks: jax.Array) -> jax.Array:

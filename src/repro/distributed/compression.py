@@ -11,8 +11,6 @@ the paper's Sec. I memory-access argument, one level up).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

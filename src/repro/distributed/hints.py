@@ -11,8 +11,6 @@ back to replication — annotations are always valid.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
-
 import jax
 from jax.sharding import PartitionSpec as P
 

@@ -16,14 +16,13 @@ the actual leaf.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import axis_size, data_axes
-from repro.models.config import ArchConfig, ShapeCell
+from repro.models.config import ArchConfig
 
 
 def _div(dim: int, mesh, *axes: str):

@@ -20,7 +20,7 @@ Validation against the paper (tests/test_hwsim.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional
 
 import numpy as np
 

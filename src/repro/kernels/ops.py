@@ -16,6 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import hotpath_contract
 from repro.kernels.delta_encode import delta_encode_pallas
 from repro.kernels.lstm_pointwise import lstm_pointwise_pallas
 from repro.kernels.stsp_spmv import (
@@ -180,6 +181,7 @@ def spmv_use_dense_gather(s: int, gamma: float) -> bool:
     return s * (1.0 - gamma) >= 1.0
 
 
+@hotpath_contract("stsp_spmv_batch")
 @functools.partial(jax.jit, static_argnames=("s", "use_pallas", "interpret"))
 def stsp_spmv_batch(
     val: jax.Array,
@@ -224,6 +226,7 @@ def lstm_pointwise_batch(
     return jax.vmap(fn)(dm, c)
 
 
+@hotpath_contract("gather_frames", op_budget={"gather": 1})
 def gather_frames(frames: jax.Array, cursor: jax.Array) -> jax.Array:
     """Gather each slot's current frame from its device-resident buffer.
 
@@ -248,6 +251,8 @@ def gather_frames(frames: jax.Array, cursor: jax.Array) -> jax.Array:
     return jnp.take_along_axis(frames, idx, axis=1)[:, 0]
 
 
+@hotpath_contract("bank_rows", forbid_ops=("scatter",),
+                  op_budget={"dynamic-update-slice": 1})
 def bank_rows(
     buf: jax.Array, rows: jax.Array, start: jax.Array
 ) -> jax.Array:
@@ -269,6 +274,8 @@ def bank_rows(
     return jax.vmap(one)(buf, per_slot, start)
 
 
+@hotpath_contract("gather_rows",
+                  forbid_ops=("scatter", "dynamic-update-slice"))
 def gather_rows(buf: jax.Array, start: jax.Array, n: int) -> jax.Array:
     """Inverse of ``bank_rows``: slice each slot's last-banked chunk back out.
 
@@ -297,6 +304,8 @@ def delta_spmv_dense_gather(
     return panel @ ds_vals
 
 
+@hotpath_contract("delta_spmv_dense_topk", forbid_ops=("transpose",),
+                  op_budget={"dot": 1, "sort": 1})
 @functools.partial(jax.jit, static_argnames=("capacity",))
 def delta_spmv_dense_topk_batch(
     wt: jax.Array, delta: jax.Array, capacity: int

@@ -15,14 +15,13 @@ Straggler/failure policy at the job level (launch/train.py):
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 
 from repro.distributed.sharding import param_specs
-from repro.launch.mesh import compat_make_mesh, make_production_mesh
+from repro.launch.mesh import compat_make_mesh
 
 
 def best_mesh_for(n_devices: int):

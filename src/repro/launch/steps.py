@@ -7,10 +7,6 @@ checkpointing) — the standard memory policy at these shapes.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

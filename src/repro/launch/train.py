@@ -21,12 +21,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import get_arch
 from repro.core import alpha_at, cbtd_prune_tree
 from repro.data.lm import LMConfig, LMDataset
-from repro.distributed.sharding import batch_specs, param_specs
+from repro.distributed.sharding import param_specs
 from repro.launch.elastic import best_mesh_for
 from repro.launch.mesh import mesh_context
 from repro.launch.steps import make_train_step

@@ -14,15 +14,13 @@ The paper's technique hooks in at two points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig, ShapeCell
 from repro.models import encdec, mamba2, rglru, transformer
-from repro.models.transformer import ce_loss
 
 DEC_TRAIN_FRAC = 8  # enc-dec: decoder length = seq_len / 8 in train cells
 

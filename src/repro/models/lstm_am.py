@@ -9,7 +9,7 @@ statistics for the hardware model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,6 @@ from repro.core import (
     delta_lstm_layer,
     fake_quant_act_ste,
     fake_quant_ste,
-    init_delta_lstm_state,
     init_lstm_params,
     lstm_layer,
     stacked_weight_matrix,

@@ -10,7 +10,7 @@ and memory fit.  ``unrolled()`` is the context flag the probe sets.
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

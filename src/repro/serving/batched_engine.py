@@ -52,6 +52,7 @@ from typing import Any, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import hotpath_contract
 from repro.kernels import ops
 from repro.models.lstm_am import LSTMAMConfig
 from repro.serving import telemetry as tele
@@ -218,6 +219,8 @@ class BatchedSpartusEngine(PackedSpartusModel):
         state = self._apply_reset(state, reset, reset_cursor=False)
         return self._step_core(state, x, active, state.cursor)
 
+    @hotpath_contract("step_frames", donates=("state",),
+                      op_budget={"transpose": 0})
     def _step_frames_impl(
         self, state: PoolState, frames: jax.Array, active: jax.Array,
         reset: jax.Array,
@@ -230,6 +233,8 @@ class BatchedSpartusEngine(PackedSpartusModel):
         new_cur = state.cursor + active.astype(state.cursor.dtype)
         return self._step_core(state, x, active, new_cur)
 
+    @hotpath_contract("step_chunk", donates=("state", "out_buf"),
+                      op_budget={"transpose": 0, "dynamic-update-slice": 8})
     def _step_chunk_impl(
         self, state: PoolState, frames: jax.Array, lengths: jax.Array,
         active: jax.Array, reset: jax.Array, out_buf: jax.Array,

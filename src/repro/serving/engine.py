@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CBCSC, blen_for, cbcsc_decode, cbcsc_encode, int8_pack, keep_count,
+    CBCSC, blen_for, cbcsc_decode, cbcsc_encode, int8_pack,
 )
 from repro.core.delta_lstm import stacked_weight_matrix
 from repro.kernels import ops

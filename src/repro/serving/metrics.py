@@ -156,6 +156,16 @@ class Histogram:
 
     def cumulative(self) -> List[Tuple[float, int]]:
         """[(le, cumulative_count)] including the +Inf bucket."""
+        return self.stats()[2]
+
+    def stats(self) -> Tuple[int, float, List[Tuple[float, int]]]:
+        """``(count, sum, cumulative buckets)`` read under ONE lock
+        acquisition — the only way to get a self-consistent view while
+        observers keep folding.  Reading ``count``/``sum``/
+        ``cumulative()`` separately can tear: an ``observe`` landing
+        between the reads makes the +Inf bucket disagree with ``_count``
+        (scrapers and Prometheus recording rules treat that as data
+        corruption)."""
         out: List[Tuple[float, int]] = []
         acc = 0
         with self._lock:
@@ -163,7 +173,7 @@ class Histogram:
                 acc += c
                 out.append((le, acc))
             out.append((float("inf"), acc + self._counts[-1]))
-        return out
+            return self._count, self._sum, out
 
 
 class MetricsRegistry:
@@ -216,9 +226,10 @@ class MetricsRegistry:
         for (name, lab), m in metrics:
             key = name + _fmt_labels(lab)
             if isinstance(m, Histogram):
+                count, total, cum = m.stats()   # one lock: no torn reads
                 out[key] = {
-                    "type": "histogram", "count": m.count, "sum": m.sum,
-                    "buckets": {str(le): c for le, c in m.cumulative()
+                    "type": "histogram", "count": count, "sum": total,
+                    "buckets": {str(le): c for le, c in cum
                                 if np.isfinite(le)},
                 }
             else:
@@ -243,15 +254,16 @@ class MetricsRegistry:
                 lines.append(f"# TYPE {name} {kind}")
                 seen_header.add(name)
             if isinstance(m, Histogram):
-                for le, c in m.cumulative():
+                count, total, cum = m.stats()   # one lock: no torn reads
+                for le, c in cum:
                     le_s = "+Inf" if not np.isfinite(le) else repr(le)
                     extra = dict(lab)
                     extra["le"] = le_s
                     lines.append(
                         f"{name}_bucket"
                         f"{_fmt_labels(tuple(sorted(extra.items())))} {c}")
-                lines.append(f"{name}_sum{_fmt_labels(lab)} {m.sum}")
-                lines.append(f"{name}_count{_fmt_labels(lab)} {m.count}")
+                lines.append(f"{name}_sum{_fmt_labels(lab)} {total}")
+                lines.append(f"{name}_count{_fmt_labels(lab)} {count}")
             else:
                 v = m.value
                 v_s = repr(v) if v != int(v) else str(int(v))

@@ -786,13 +786,14 @@ class SessionPool:
                           jnp.float32)
         if self._mesh is not None:
             grown = shardlib.shard_slot_array(grown, self._mesh)
+        # lint: allow(eager-scatter) one-time realloc
         self._frames = grown.at[:, :old_t, :].set(self._frames)
         if self._out is not None:
             out = jnp.zeros((self.capacity, new_t + self.chunk_frames,
                              self.engine.n_classes), jnp.float32)
             if self._mesh is not None:
                 out = shardlib.shard_slot_array(out, self._mesh)
-            self._out = out.at[
+            self._out = out.at[  # lint: allow(eager-scatter) one-time realloc
                 :, :old_t + self.chunk_frames, :].set(self._out)
         self._t_buf = new_t
         self.n_frame_grows += 1

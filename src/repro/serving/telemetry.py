@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import hotpath_contract
+
 
 class TelemetryState(NamedTuple):
     """Per-(layer, slot) accumulators over (active slot, frame) samples.
@@ -79,11 +81,14 @@ def accumulate(
 ) -> TelemetryState:
     """Fold one layer-step of one batch into the accumulators (traced)."""
     act = active.astype(jnp.float32)
+    # traced-only helper: called from inside the jitted step, never eagerly
     return TelemetryState(
-        nnz_sum=tel.nnz_sum.at[layer].add(nnz.astype(jnp.float32) * act),
+        nnz_sum=tel.nnz_sum.at[layer].add(  # lint: allow(eager-scatter)
+            nnz.astype(jnp.float32) * act),
+        # lint: allow(eager-scatter)
         overflow_steps=tel.overflow_steps.at[layer].add(
             (dropped > 0).astype(jnp.float32) * act),
-        steps=tel.steps.at[layer].add(act),
+        steps=tel.steps.at[layer].add(act),  # lint: allow(eager-scatter)
     )
 
 
@@ -120,6 +125,9 @@ def percentile_summary(
     return {f"p{q}_{name}": float(np.percentile(arr, q)) for q in qs}
 
 
+@hotpath_contract("fold_totals",
+                  forbid_ops=("dot", "gather", "scatter",
+                              "dynamic-update-slice"))
 def fold_totals(tel: TelemetryState, n_cols: Sequence[int]) -> jax.Array:
     """Reduce the `[L, B]` accumulators to the three running totals that
     `measured_sparsity` is built from, ON DEVICE (traced / jittable):

@@ -12,7 +12,6 @@ metric (greedy best-path decoding, Sec. V-B).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,12 +6,17 @@ endpoint must answer every command against a live async pool under load.
 """
 import asyncio
 import json
+import re
+import threading
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import hlo as hlolib
+from repro.analysis.cases import lower_pool_chunk
 from repro.models import lstm_am
 from repro.serving import (
     AsyncSpartusServer,
@@ -51,20 +56,10 @@ def _requests(feats):
 
 
 # ------------------------------------------- zero-added-host-transfer pin
-
-def _lower_chunk_hlo(engine, feats, observability):
-    """Compile the pool's chunk step exactly as a serving run would and
-    return its optimized HLO text."""
-    pool = SessionPool(engine, capacity=4, max_frames=16, chunk_frames=4,
-                       observability=observability)
-    for i, f in enumerate(feats[:4]):
-        pool.admit(StreamRequest(100 + i, 0, f), 0)
-    pool._reap_cancelled()
-    active, reset = pool._masks()
-    pool._flush_uploads()
-    return engine._step_chunk.lower(
-        pool.state, pool._frames, pool._lengths, pool._dev1d(active),
-        pool._dev1d(reset), pool._out, n_frames=4).compile().as_text()
+# The chunk-lowering recipe and the forbidden-token scan live in
+# repro.analysis (cases.lower_pool_chunk / hlo.host_transfer_lines): the
+# same code the contract checker and `python -m tools.lint --contracts`
+# run, so this pin and CI can never drift apart.
 
 
 def test_compiled_chunk_identical_with_and_without_obs(engine, workload):
@@ -74,14 +69,11 @@ def test_compiled_chunk_identical_with_and_without_obs(engine, workload):
     step — and the scan itself must contain no host-transfer ops
     (outfeed/infeed/callback), i.e. zero added host syncs per scan
     iteration."""
-    hlo_off = _lower_chunk_hlo(engine, workload, observability=None)
-    hlo_on = _lower_chunk_hlo(engine, workload,
+    hlo_off = lower_pool_chunk(engine, workload, observability=None)
+    hlo_on = lower_pool_chunk(engine, workload,
                               observability=PoolObservability())
     assert hlo_on == hlo_off
-    forbidden = ("outfeed", "infeed", "xla_python_cpu_callback",
-                 "host_callback", "SendToHost", "RecvFromHost")
-    hits = [l for l in hlo_on.splitlines()
-            if any(tok in l for tok in forbidden)]
+    hits = hlolib.host_transfer_lines(hlo_on)
     assert hits == [], f"host-transfer ops in compiled chunk: {hits[:5]}"
 
 
@@ -90,8 +82,7 @@ def test_telemetry_totals_reduction_is_transfer_free(engine):
     boundary fold diffs — must itself lower without host callbacks."""
     txt = engine._tel_totals.lower(engine.init_state(4).telemetry) \
         .compile().as_text()
-    assert "outfeed" not in txt and "infeed" not in txt
-    assert "xla_python_cpu_callback" not in txt
+    assert hlolib.host_transfer_lines(txt) == []
 
 
 # ----------------------------------------------- counter/ServeStats parity
@@ -288,3 +279,115 @@ def test_async_trace_and_admin_endpoint(engine, workload):
     names = {e["name"] for e in doc["traceEvents"]}
     assert FIVE_PHASES <= names, f"missing phases: {FIVE_PHASES - names}"
     assert all(e["ph"] in ("X", "i") for e in doc["traceEvents"])
+
+
+# ----------------------------------------- scrape-vs-update thread safety
+
+_BUCKET_RE = re.compile(r"^(\w+)_bucket\{(.*)\} (\d+)$")
+_COUNT_RE = re.compile(r"^(\w+)_count(?:\{(.*)\})? (\d+)$")
+
+
+def _assert_prometheus_consistent(text):
+    """Every histogram family in one exposition must be self-consistent:
+    the +Inf bucket equals ``_count`` and cumulative buckets are
+    monotone.  A scrape interleaved with an ``observe`` used to tear
+    (buckets, sum and count were read under separate lock
+    acquisitions)."""
+    inf_buckets, buckets = {}, {}
+    for line in text.splitlines():
+        m = _BUCKET_RE.match(line)
+        if m:
+            name, labels, v = m.group(1), m.group(2), int(m.group(3))
+            rest = ",".join(p for p in labels.split(",")
+                            if not p.startswith('le="'))
+            buckets.setdefault((name, rest), []).append(v)
+            if 'le="+Inf"' in labels:
+                inf_buckets[(name, rest)] = v
+            continue
+        m = _COUNT_RE.match(line)
+        if m:
+            key = (m.group(1), m.group(2) or "")
+            assert inf_buckets[key] == int(m.group(3)), \
+                f"torn scrape: {key} +Inf bucket != count in\n{line}"
+    for key, vals in buckets.items():
+        assert vals == sorted(vals), f"non-monotone buckets for {key}"
+    return len(inf_buckets)
+
+
+def test_metrics_scrape_consistency_under_hammer():
+    """Pure-registry stress: observer threads hammer one histogram (plus
+    a counter) while scraper threads render/snapshot concurrently; every
+    single scrape must be internally consistent."""
+    from repro.serving.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    hist = reg.histogram("stress_seconds", "stress", buckets=(0.1, 1.0, 10.0))
+    ctr = reg.counter("stress_total", "stress")
+    stop = threading.Event()
+    errors = []
+
+    def observer():
+        i = 0
+        while not stop.is_set():
+            hist.observe(0.01 * (i % 400))   # spans all buckets + overflow
+            ctr.inc()
+            i += 1
+
+    def scraper():
+        try:
+            while not stop.is_set():
+                _assert_prometheus_consistent(reg.render_prometheus())
+                snap = reg.snapshot()["stress_seconds"]
+                cum = [snap["buckets"][k] for k in ("0.1", "1.0", "10.0")]
+                assert cum == sorted(cum)
+                assert snap["count"] >= cum[-1]
+        except AssertionError as e:   # surfaced after join
+            errors.append(e)
+
+    threads = ([threading.Thread(target=observer) for _ in range(3)]
+               + [threading.Thread(target=scraper) for _ in range(3)])
+    for t in threads:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    # quiescent ground truth: totals survived the concurrency intact
+    count, total, cum = hist.stats()
+    assert count == hist.count == cum[-1][1]
+    assert total == pytest.approx(hist.sum)
+
+
+def test_metrics_scrape_consistency_against_ticking_pool(engine, workload):
+    """End-to-end stress: scrape the live registry while a real pool
+    run folds metrics at every chunk boundary."""
+    obs = PoolObservability()
+    done = threading.Event()
+    errors = []
+
+    def scraper():
+        n_scrapes = 0
+        try:
+            while not done.is_set() or n_scrapes == 0:
+                _assert_prometheus_consistent(obs.registry.render_prometheus())
+                obs.registry.snapshot()
+                n_scrapes += 1
+        except AssertionError as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=scraper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        results, _ = serve_requests(engine, _requests(workload), capacity=3,
+                                    chunk_frames=4, observability=obs)
+    finally:
+        done.set()
+        for t in threads:
+            t.join()
+    assert not errors, errors[0]
+    assert len(results) == len(workload)
+    # a final quiescent scrape sees the full run:
+    n_hist = _assert_prometheus_consistent(obs.registry.render_prometheus())
+    assert n_hist >= 2      # dispatch_seconds, chunk_seconds, ...

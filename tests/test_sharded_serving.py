@@ -282,21 +282,13 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
                 r.logits - refs[r.req_id]))))
 
     # zero-communication pin: compile the sharded chunk and count
-    # collective ops (the steady state must not communicate):
-    from repro.serving.scheduler import SessionPool
-    pool = SessionPool(eb, capacity=8, max_frames=16, chunk_frames=4,
-                       n_devices=4)
-    for i in range(8):
-        pool.admit(StreamRequest(100 + i, 0, feats[i % len(feats)]), 0)
-    pool._reap_cancelled()
-    active, reset = pool._masks()
-    pool._flush_uploads()
-    txt = eb._step_chunk.lower(
-        pool.state, pool._frames, pool._lengths, pool._dev1d(active),
-        pool._dev1d(reset), pool._out, n_frames=4).compile().as_text()
-    colls = sum(1 for l in txt.splitlines() if any(c in l for c in (
-        "all-reduce", "all-gather", "collective-permute", "all-to-all",
-        "reduce-scatter")))
+    # collective ops (the steady state must not communicate).  The
+    # lowering recipe and the token scan are the shared analyzer's —
+    # the same code `python -m tools.lint --contracts` runs in CI:
+    from repro.analysis.cases import lower_pool_chunk
+    from repro.analysis.hlo import count_collectives
+    txt = lower_pool_chunk(eb, feats, capacity=8, n_devices=4)
+    colls = count_collectives(txt)
     print(json.dumps({"devices": len(jax.devices()), "max_err": max_err,
                       "collectives": colls}))
 """)

@@ -1,0 +1,1 @@
+"""Repo tooling: ``python -m tools.lint``, docs checker, smoke scripts."""

@@ -1,0 +1,111 @@
+"""Repo lint driver: AST rules + hot-path contract checking.
+
+Usage (from the repo root)::
+
+    python -m tools.lint --ast --contracts [--report out.json]
+
+``--ast`` runs the repo-specific AST rules (repro.analysis.lint) over
+every ``.py`` file under ``src/`` and ``tools/``.  ``--contracts``
+lowers and compiles every registered hot-path contract case
+(repro.analysis.cases) and checks the optimized HLO.  With neither flag,
+both layers run.  Exit status is non-zero on any violation; ``--report``
+writes a JSON artifact with every finding and per-case op histograms
+(the CI lint job uploads it).
+
+By default the process re-execs itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the *sharded*
+``step_chunk`` case — the zero-collectives pin — is checked too; set
+``SPARTUS_LINT_NO_FORCE_DEVICES=1`` to skip that (e.g. on real
+multi-device hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _ensure_devices() -> None:
+    """Arrange for >= 4 (emulated) devices before jax initialises."""
+    if os.environ.get("SPARTUS_LINT_NO_FORCE_DEVICES"):
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def _run_ast() -> list:
+    from repro.analysis import lint
+
+    return lint.lint_repo(REPO_ROOT)
+
+
+def _run_contracts() -> list:
+    from repro.analysis import cases, contracts
+
+    return contracts.check_cases(cases.build_cases())
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="tools.lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("--ast", action="store_true",
+                        help="run the repo-specific AST rules")
+    parser.add_argument("--contracts", action="store_true",
+                        help="compile and check the hot-path contracts")
+    parser.add_argument("--report", type=Path, default=None,
+                        help="write a JSON report artifact")
+    args = parser.parse_args(argv)
+    run_ast = args.ast or not (args.ast or args.contracts)
+    run_contracts = args.contracts or not (args.ast or args.contracts)
+
+    failed = False
+    report: dict = {}
+
+    if run_ast:
+        findings = _run_ast()
+        report["ast"] = [vars(f) for f in findings]
+        if findings:
+            failed = True
+            print(f"AST lint: {len(findings)} finding(s)")
+            for f in findings:
+                print(f"  {f}")
+        else:
+            print("AST lint: clean")
+
+    if run_contracts:
+        reports = _run_contracts()
+        report["contracts"] = [r.to_dict() for r in reports]
+        n_bad = sum(not r.ok for r in reports)
+        import jax
+
+        print(f"contracts: {len(reports)} case(s) on {jax.device_count()} "
+              f"device(s), {n_bad} failing")
+        for r in reports:
+            print(f"  {r.summary()}")
+            for v in r.violations:
+                print(f"      {v}")
+        if n_bad:
+            failed = True
+
+    if args.report is not None:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(json.dumps(report, indent=2))
+        print(f"report written to {args.report}")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    _ensure_devices()
+    src = REPO_ROOT / "src"
+    if str(src) not in sys.path:
+        sys.path.insert(0, str(src))
+    sys.exit(main())
