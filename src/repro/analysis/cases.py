@@ -180,6 +180,39 @@ def _built_step_chunk_sharded() -> BuiltCase:
     return built_pool_chunk(_engine(), _feats(8), capacity=8, n_devices=4)
 
 
+def _built_step_chunk_restored() -> BuiltCase:
+    """The chunk step as staged by a pool REBUILT from a checkpoint — the
+    watchdog-recovery / preemption-resume path (serving/checkpoint.py).
+
+    Restore is host-side assembly plus the standard upload wave, so the
+    dispatch a restored pool stages must be the very same compiled
+    ``_step_chunk`` with the same shapes, donation and op budgets as a
+    fresh pool's — zero ops added by having been through a checkpoint."""
+    from repro.serving import StreamRequest
+    from repro.serving import checkpoint as ckptlib
+    from repro.serving.scheduler import SessionPool
+
+    engine = _engine()
+    feats = _feats()
+    pool = SessionPool(engine, capacity=4, max_frames=16, chunk_frames=4)
+    for i in range(4):
+        pool.admit(StreamRequest(100 + i, 0, feats[i]), 0)
+    pool.step_chunk(0)                      # mid-flight recurrent state
+    ckpt = ckptlib.snapshot_pool(pool)
+    pool2 = SessionPool(engine, capacity=4, max_frames=16, chunk_frames=4)
+    ckptlib.restore_into(pool2, ckpt)
+    pool2._reap_cancelled()
+    active, reset = pool2._masks()
+    pool2._flush_uploads()
+    return BuiltCase(
+        fn=engine._step_chunk,
+        args=(pool2.state, pool2._frames, pool2._lengths,
+              pool2._dev1d(active), pool2._dev1d(reset), pool2._out),
+        kwargs={"n_frames": 4},
+        donate_argnums=(0, 5),
+    )
+
+
 def _spmv_args(spmv_path: str) -> Tuple[Any, ...]:
     layer = _engine(spmv_path).layers[0]
     k = layer.capacity
@@ -270,6 +303,9 @@ def build_cases(*, include_sharded: Optional[bool] = None) -> List[ContractCase]
                      op_budget_override={"sort": 0}),
         ContractCase("step_chunk/scatter", "step_chunk",
                      lambda: _built_step_chunk("scatter")),
+        ContractCase("step_chunk/post-restore", "step_chunk",
+                     _built_step_chunk_restored,
+                     op_budget_override={"sort": 0}),
         ContractCase("stsp_spmv_batch/xla-scatter", "stsp_spmv_batch",
                      lambda: _built_spmv_scatter(False)),
         ContractCase("stsp_spmv_batch/pallas", "stsp_spmv_batch",

@@ -20,7 +20,8 @@ session pool with --pool N, or the asyncio streaming front-end with
 The --async mode exposes the `AsyncSpartusServer` over a localhost
 TCP socket speaking newline-delimited JSON (one object per line):
 
-    client -> {"op": "open",   "id": 0}
+    client -> {"op": "open",   "id": 0}        # optional "token": "..."
+    server -> {"event": "open_ok", "id": 0}
     client -> {"op": "frames", "id": 0, "frames": [[...], ...]}   # [n, D]
     client -> {"op": "close",  "id": 0}        # end of utterance
     client -> {"op": "cancel", "id": 0}        # abandon mid-utterance
@@ -28,12 +29,27 @@ TCP socket speaking newline-delimited JSON (one object per line):
     server -> {"event": "done", "id": 0, "n_frames": 40,
                "latency_ms": ..., "ttfl_ms": ..., "queue_wait_ms": ...}
     server -> {"event": "cancelled", "id": 0}
-    server -> {"event": "error", "id": 0, "message": "..."}
+    server -> {"event": "error", "id": 0, "code": "...",
+               "retriable": false, "message": "..."}
 
 `id` is chosen by the client and scopes to its connection; multiple
 streams may be multiplexed over one connection.  Partial logits arrive
 per chunk as they are produced (`target_chunk_ms` paces the boundaries);
 `done` closes the stream with its latency breakdown.
+
+Every error carries a stable ``code`` and a ``retriable`` flag
+(serving/faults.py; catalog in docs/robustness.md) — malformed traffic
+(``bad_json`` / ``unknown_op`` / ``no_such_stream`` / ``duplicate_id`` /
+``bad_request``) answers in-band and only ever fails the offending
+stream; the connection and every other stream stay up.  The one
+transport-level violation is a line over ``MAX_LINE_BYTES`` (framing is
+lost at that point): the server answers ``line_too_long`` and closes
+THAT connection.  Retriable errors (``shed`` under --overload shed,
+``timeout`` under --idle-timeout, ``retriable_internal`` after a
+watchdog recovery) are retried by the demo client with seeded
+full-jitter backoff; ``"token"`` on open makes the retry idempotent
+(re-opening a live token returns the same stream instead of
+double-admitting).
 
 **Admin surface** (--async): `--admin-port P` opens a second localhost
 listener speaking the same JSON-lines convention, read-only, for
@@ -58,13 +74,23 @@ Perfetto or chrome://tracing.
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro.models import api
+from repro.serving.faults import Backoff, ProtocolError, error_payload
+
+#: JSON-lines framing bound: one message may not exceed this many bytes.
+#: Past it the stream's framing is unrecoverable (we cannot know where the
+#: runaway line ends a message), so the server answers ``line_too_long``
+#: and closes that one connection.
+MAX_LINE_BYTES = 1 << 20
 
 
 def serve_arch(args):
@@ -254,6 +280,185 @@ async def start_admin_server(server, observability, host: str = "127.0.0.1",
     return await asyncio.start_server(handle, host, port)
 
 
+def jline(writer, obj):
+    """Write one JSON-lines message (module-level: the protocol tests and
+    the demo client share it with the connection handler)."""
+    writer.write((json.dumps(obj) + "\n").encode())
+
+
+async def handle_conn(server, reader, writer):
+    """One JSON-lines client connection over an `AsyncSpartusServer`.
+
+    Module-level so the protocol fuzz tests (tests/test_faults.py) can
+    drive it against in-memory stream pairs.  Malformed traffic — bad
+    JSON, unknown ops, frames before open, duplicate opens, invalid
+    payloads — answers with a typed in-band ``error`` event (codes from
+    serving/faults.py) and fails at most the offending stream; every
+    other stream on the connection, and every other connection, is
+    untouched.  The single transport-level failure is an over-long line
+    (``MAX_LINE_BYTES``): framing is unrecoverable, so the handler
+    answers ``line_too_long`` and closes this one connection."""
+    handles = {}
+    pumps = []
+
+    async def pump_out(cid, handle):
+        try:
+            async for p in handle:
+                jline(writer, {"event": "partial", "id": cid,
+                               "t0": p.t0, "logits": p.rows.tolist()})
+                await writer.drain()
+            r = await handle.result()
+            jline(writer, {
+                "event": "done", "id": cid,
+                "n_frames": int(r.logits.shape[0]),
+                "latency_ms": r.wall_latency_s * 1e3,
+                "ttfl_ms": r.ttfl_s * 1e3,
+                "queue_wait_ms": r.queue_wait_s * 1e3})
+            await writer.drain()
+        except asyncio.CancelledError:
+            try:
+                jline(writer, {"event": "cancelled", "id": cid})
+                await writer.drain()
+            except (ConnectionError, RuntimeError):
+                pass             # connection already gone
+            raise
+        except Exception as e:   # reaped / lost-in-recovery: typed + in-band
+            try:
+                jline(writer, {"event": "error", "id": cid,
+                               **error_payload(e)})
+                await writer.drain()
+            except (ConnectionError, RuntimeError):
+                pass
+
+    try:
+        while True:
+            try:
+                line = await reader.readline()
+            except ValueError:   # reader limit: the line never terminated
+                jline(writer, {"event": "error", "id": None,
+                               **error_payload(ProtocolError(
+                                   "line_too_long",
+                                   f"message exceeds {MAX_LINE_BYTES} "
+                                   f"bytes; closing connection"))})
+                await writer.drain()
+                break
+            if not line:
+                break
+            msg = None           # stays None if this line fails to parse
+            try:
+                try:
+                    msg = json.loads(line)
+                except Exception:
+                    raise ProtocolError("bad_json",
+                                        "line is not valid JSON") from None
+                if not isinstance(msg, dict) or "op" not in msg:
+                    raise ProtocolError(
+                        "bad_json", "message must be an object with an 'op'")
+                op, cid = msg["op"], msg.get("id", 0)
+                if op == "open":
+                    if cid in handles:
+                        raise ProtocolError(
+                            "duplicate_id",
+                            f"stream {cid} is already open on this "
+                            f"connection")
+                    handles[cid] = await server.stream(
+                        want_partials=True, token=msg.get("token"))
+                    pumps.append(asyncio.create_task(
+                        pump_out(cid, handles[cid])))
+                    jline(writer, {"event": "open_ok", "id": cid})
+                    await writer.drain()
+                elif op in ("frames", "close", "cancel"):
+                    if cid not in handles:
+                        raise ProtocolError(
+                            "no_such_stream",
+                            f"stream {cid} is not open on this connection "
+                            f"(send 'open' first)")
+                    if op == "frames":
+                        if "frames" not in msg:
+                            raise ProtocolError(
+                                "bad_json",
+                                "'frames' op requires a 'frames' field")
+                        await handles[cid].send(
+                            np.asarray(msg["frames"], np.float32))
+                    elif op == "close":
+                        handles[cid].close()
+                    else:
+                        handles[cid].cancel()
+                else:
+                    raise ProtocolError("unknown_op", f"unknown op {op!r}")
+            except asyncio.CancelledError:
+                raise
+            except Exception as e:  # typed, in-band; connection stays up
+                jline(writer, {"event": "error",
+                               "id": msg.get("id") if isinstance(msg, dict)
+                               else None, **error_payload(e)})
+                await writer.drain()
+    finally:
+        for cid, h in handles.items():
+            h.cancel()           # connection gone: abandon open streams
+        for t in pumps:
+            t.cancel()
+        # retrieve the pumps' outcomes BEFORE closing the transport so
+        # a cancelled pump's last write never lands on a closed writer
+        # (and no "exception was never retrieved" warnings are logged):
+        await asyncio.gather(*pumps, return_exceptions=True)
+        writer.close()
+
+
+async def demo_client(port, cid, feats, *, max_attempts=6, seed=None):
+    """Stream one utterance over TCP, retrying retriable errors.
+
+    The client half of the robustness story: it opens with an idempotent
+    token (a retry after a dropped ``open_ok`` cannot double-admit), and
+    on a retriable error (``shed``, ``timeout``, ``retriable_internal``)
+    it backs off with seeded full-jitter delays — honouring the server's
+    ``retry_after_ms`` hint when present — and resends the utterance."""
+    backoff = Backoff(seed=cid if seed is None else seed)
+    token = f"demo-{cid}"
+    last = None
+    for attempt in range(max_attempts):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        jline(writer, {"op": "open", "id": cid, "token": token})
+        await writer.drain()
+        msg = json.loads(await reader.readline())
+        if msg.get("event") == "error":
+            writer.close()
+            last = msg
+            if not msg.get("retriable"):
+                raise RuntimeError(f"server error: {msg}")
+            await asyncio.sleep(max(msg.get("retry_after_ms", 0.0) / 1e3,
+                                    backoff.delay(attempt)))
+            continue
+        assert msg.get("event") == "open_ok", msg
+        for j in range(0, len(feats), 8):       # stream in 8-frame slices
+            jline(writer, {"op": "frames", "id": cid,
+                           "frames": feats[j:j + 8].tolist()})
+            await writer.drain()
+            await asyncio.sleep(0.005)
+        jline(writer, {"op": "close", "id": cid})
+        await writer.drain()
+        rows, done, retry = [], None, False
+        while line := await reader.readline():
+            msg = json.loads(line)
+            if msg["event"] == "partial":
+                rows.append(np.asarray(msg["logits"], np.float32))
+            elif msg["event"] == "done":
+                done = msg
+                break
+            elif msg["event"] == "error" and msg.get("retriable"):
+                last, retry = msg, True
+                break
+            else:
+                raise RuntimeError(f"server error: {msg}")
+        writer.close()
+        if retry:
+            await asyncio.sleep(backoff.delay(attempt))
+            continue
+        return cid, np.concatenate(rows), done
+    raise RuntimeError(
+        f"client {cid}: gave up after {max_attempts} attempts ({last})")
+
+
 def serve_spartus_async(args):
     """--async: the asyncio streaming front-end behind a localhost
     TCP/JSON-lines protocol (see the module docstring), plus optional
@@ -261,11 +466,6 @@ def serve_spartus_async(args):
 
     Uses an untrained CBTD-pruned model (the protocol/latency demo does
     not need trained weights; run --pool mode for the trained pipeline)."""
-    import asyncio
-    import json
-
-    import numpy as np
-
     from repro.data.speech import SpeechConfig, SpeechDataset
     from repro.models import lstm_am
     from repro.serving import AsyncSpartusServer, BatchedSpartusEngine, \
@@ -283,93 +483,6 @@ def serve_spartus_async(args):
     capacity = max(args.pool, 1)
     chunk = args.chunk_frames or 8
 
-    def jline(writer, obj):
-        writer.write((json.dumps(obj) + "\n").encode())
-
-    async def handle_conn(server, reader, writer):
-        handles = {}
-        pumps = []
-
-        async def pump_out(cid, handle):
-            try:
-                async for p in handle:
-                    jline(writer, {"event": "partial", "id": cid,
-                                   "t0": p.t0, "logits": p.rows.tolist()})
-                    await writer.drain()
-                r = await handle.result()
-                jline(writer, {
-                    "event": "done", "id": cid,
-                    "n_frames": int(r.logits.shape[0]),
-                    "latency_ms": r.wall_latency_s * 1e3,
-                    "ttfl_ms": r.ttfl_s * 1e3,
-                    "queue_wait_ms": r.queue_wait_s * 1e3})
-                await writer.drain()
-            except asyncio.CancelledError:
-                try:
-                    jline(writer, {"event": "cancelled", "id": cid})
-                    await writer.drain()
-                except (ConnectionError, RuntimeError):
-                    pass             # connection already gone
-                raise
-
-        try:
-            while line := await reader.readline():
-                msg = None           # stays None if this line fails to parse
-                try:
-                    msg = json.loads(line)
-                    op, cid = msg["op"], msg.get("id", 0)
-                    if op == "open":
-                        handles[cid] = await server.stream(want_partials=True)
-                        pumps.append(asyncio.create_task(
-                            pump_out(cid, handles[cid])))
-                    elif op == "frames":
-                        await handles[cid].send(
-                            np.asarray(msg["frames"], np.float32))
-                    elif op == "close":
-                        handles[cid].close()
-                    elif op == "cancel":
-                        handles[cid].cancel()
-                    else:
-                        raise ValueError(f"unknown op {op!r}")
-                except Exception as e:  # protocol errors answer in-band
-                    jline(writer, {"event": "error",
-                                   "id": msg.get("id") if isinstance(msg, dict)
-                                   else None, "message": str(e)})
-                    await writer.drain()
-        finally:
-            for cid, h in handles.items():
-                h.cancel()           # connection gone: abandon open streams
-            for t in pumps:
-                t.cancel()
-            # retrieve the pumps' outcomes BEFORE closing the transport so
-            # a cancelled pump's last write never lands on a closed writer
-            # (and no "exception was never retrieved" warnings are logged):
-            await asyncio.gather(*pumps, return_exceptions=True)
-            writer.close()
-
-    async def demo_client(port, cid, feats):
-        reader, writer = await asyncio.open_connection("127.0.0.1", port)
-        jline(writer, {"op": "open", "id": cid})
-        for j in range(0, len(feats), 8):       # stream in 8-frame slices
-            jline(writer, {"op": "frames", "id": cid,
-                           "frames": feats[j:j + 8].tolist()})
-            await writer.drain()
-            await asyncio.sleep(0.005)
-        jline(writer, {"op": "close", "id": cid})
-        await writer.drain()
-        rows, done = [], None
-        while line := await reader.readline():
-            msg = json.loads(line)
-            if msg["event"] == "partial":
-                rows.append(np.asarray(msg["logits"], np.float32))
-            elif msg["event"] == "done":
-                done = msg
-                break
-            else:
-                raise RuntimeError(f"server error: {msg}")
-        writer.close()
-        return cid, np.concatenate(rows), done
-
     async def run():
         obs = PoolObservability(tracer=Tracer(enabled=bool(args.trace)))
         server = AsyncSpartusServer(
@@ -377,7 +490,10 @@ def serve_spartus_async(args):
             target_chunk_ms=args.target_chunk_ms, max_frames=64,
             max_pending=4 * capacity,
             n_devices=args.devices if args.devices > 0 else None,
-            observability=obs)
+            observability=obs,
+            overload_policy=args.overload,
+            idle_timeout_s=args.idle_timeout or None,
+            watchdog=True)
 
         async def log_stats():
             while True:
@@ -389,7 +505,7 @@ def serve_spartus_async(args):
         async with server:
             tcp = await asyncio.start_server(
                 lambda r, w: handle_conn(server, r, w),
-                "127.0.0.1", args.port)
+                "127.0.0.1", args.port, limit=MAX_LINE_BYTES)
             port = tcp.sockets[0].getsockname()[1]
             mode = (f"{args.target_chunk_ms:.0f} ms/chunk paced"
                     if args.target_chunk_ms else "free-run")
@@ -493,6 +609,15 @@ def main():
                     help="--async: record driver-phase spans and write a "
                          "Chrome trace-event JSON here on shutdown "
                          "(Perfetto / chrome://tracing)")
+    ap.add_argument("--idle-timeout", type=float, default=0.0,
+                    help="--async: reap sessions whose client is silent "
+                         "for S seconds (typed retriable 'timeout' error; "
+                         "0 = never)")
+    ap.add_argument("--overload", choices=("wait", "shed"), default="wait",
+                    help="--async: admission policy when max_pending "
+                         "saturates — 'wait' queues the caller, 'shed' "
+                         "answers a retriable typed error with a "
+                         "retry_after_ms hint")
     args = ap.parse_args()
     if args.async_mode:
         if not args.spartus:

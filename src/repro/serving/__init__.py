@@ -19,14 +19,47 @@
                      text + JSON snapshot), per-chunk time-series ring,
                      driver-phase Chrome tracing (PoolObservability,
                      folded at chunk boundaries only)
+- `checkpoint`     — session checkpoint/restore: per-slot snapshots of
+                     the full recurrent state (h/c, delta memories, frame
+                     cursor, logits-bank rows), whole-pool save/restore
+                     through training/checkpoint.py's atomic writer, and
+                     cross-shard-count migration (bit-identical resume)
+- `faults`         — the robustness vocabulary: typed retriable-vs-fatal
+                     serving errors (wire codes), the seeded deterministic
+                     fault-injection harness, and full-jitter backoff
 
-See docs/serving.md for the architecture and docs/architecture.md for how
-serving fits the full pipeline.
+See docs/serving.md for the architecture, docs/robustness.md for the
+failure model, and docs/architecture.md for how serving fits the full
+pipeline.
 """
 from repro.serving.async_server import (
     AsyncSpartusServer,
     StreamClosed,
     StreamHandle,
+)
+from repro.serving.checkpoint import (
+    PoolCheckpoint,
+    SessionSnapshot,
+    engine_fingerprint,
+    load_checkpoint,
+    restore_into,
+    save_pool,
+    snapshot_pool,
+    snapshot_session,
+)
+from repro.serving.faults import (
+    AdmissionShed,
+    Backoff,
+    BadRequest,
+    DriverRecovered,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    ProtocolError,
+    ServingError,
+    SessionTimeout,
+    error_payload,
 )
 from repro.serving.batched_engine import (
     BatchedLayerState,

@@ -62,6 +62,14 @@ from typing import AsyncIterator, Deque, Dict, List, Optional
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine
+from repro.serving.faults import (
+    AdmissionShed,
+    BadRequest,
+    DriverRecovered,
+    FaultInjector,
+    InjectedFault,
+    SessionTimeout,
+)
 from repro.serving.metrics import NULL_TRACER, PoolObservability
 from repro.serving.scheduler import (
     PartialLogits,
@@ -85,10 +93,12 @@ class _ClientState:
 
     __slots__ = ("req_id", "handle", "arrival_wall", "want_partials",
                  "buffered", "closed", "cancelled", "admitted",
-                 "finish_sent", "delivered_t", "lagging")
+                 "finish_sent", "delivered_t", "lagging", "token",
+                 "last_activity")
 
     def __init__(self, req_id: int, handle: "StreamHandle",
-                 arrival_wall: float, want_partials: bool):
+                 arrival_wall: float, want_partials: bool,
+                 token: Optional[str] = None):
         self.req_id = req_id
         self.handle = handle
         self.arrival_wall = arrival_wall
@@ -101,6 +111,8 @@ class _ClientState:
         self.delivered_t = 0      # frames enqueued on the partials queue
         self.lagging = False      # queue hit partial_queue_len: snapshots
         #                           paused until the client drains
+        self.token = token        # idempotent re-admission token
+        self.last_activity = arrival_wall   # idle-reaper clock
 
 
 class StreamHandle:
@@ -208,6 +220,27 @@ class AsyncSpartusServer:
         consumers, partial-queue depth, connected streams) and traces the
         delivery/pacing phases.  Thread-safe with ``offload_ticks`` (the
         registry and ring lock internally).  ``None`` = fully off.
+    overload_policy:
+        what happens when the admission queue (``max_pending``) is full:
+        ``"wait"`` (default) blocks the caller until a slot frees — the
+        pre-robustness behaviour; ``"shed"`` raises `AdmissionShed`
+        immediately (retriable, with a ``retry_after_ms`` hint) so the
+        caller's backpressure is explicit and bounded-latency.
+    idle_timeout_s:
+        reap sessions whose client has gone silent (no send/close) for
+        this many wall-clock seconds: the slot frees and the client's
+        handle fails with `SessionTimeout` (retriable).  ``None`` = never.
+    watchdog:
+        catch a crashed tick loop instead of failing every client: the
+        driver snapshots the salvageable sessions (serving/checkpoint.py),
+        rebuilds the pool, restores them and resumes.  Only sessions whose
+        state is unrecoverable fail — with `DriverRecovered` (retriable) —
+        everyone else continues bit-identically.  ``max_recoveries`` caps
+        successive rebuilds; past it the driver fails loudly as before.
+    faults:
+        a `FaultInjector` threaded into the pool — deterministic chaos
+        for the robustness suite (tests/test_faults.py).  ``None`` in
+        production.
     """
 
     DEFAULT_PARTIAL_QUEUE_LEN = 32
@@ -219,19 +252,36 @@ class AsyncSpartusServer:
                  partial_queue_len: Optional[int] = None,
                  offload_ticks: bool = True,
                  n_devices: Optional[int] = None,
-                 observability: Optional[PoolObservability] = None):
+                 observability: Optional[PoolObservability] = None,
+                 overload_policy: str = "wait",
+                 idle_timeout_s: Optional[float] = None,
+                 watchdog: bool = False,
+                 max_recoveries: int = 8,
+                 faults: Optional[FaultInjector] = None):
         if chunk_frames < 1:
             raise ValueError("AsyncSpartusServer requires chunk_frames >= 1 "
                              "(the per-chunk partial-logits contract)")
+        if overload_policy not in ("wait", "shed"):
+            raise ValueError(f"overload_policy must be 'wait' or 'shed', "
+                             f"got {overload_policy!r}")
         self.obs = observability
         self._tracer = (observability.tracer if observability is not None
                         else NULL_TRACER)
-        self.pool = SessionPool(
-            engine, capacity, max_frames=max_frames,
-            chunk_frames=chunk_frames, max_buffer_frames=max_buffer_frames,
-            stream_partials=True, n_devices=n_devices,
-            observability=observability)
+        self._engine = engine
+        # the watchdog rebuilds the pool from these exact kwargs (modulo
+        # max_frames, which tracks the live pool's grown buffer bucket):
+        self._pool_kwargs = dict(
+            max_frames=max_frames, chunk_frames=chunk_frames,
+            max_buffer_frames=max_buffer_frames, stream_partials=True,
+            n_devices=n_devices, observability=observability, faults=faults)
+        self.pool = SessionPool(engine, capacity, **self._pool_kwargs)
         self.capacity = capacity
+        self.overload_policy = overload_policy
+        self.idle_timeout_s = idle_timeout_s
+        self.watchdog = watchdog
+        self.max_recoveries = max_recoveries
+        self.n_recoveries = 0
+        self._tokens: Dict[str, StreamHandle] = {}
         self.chunk_frames = chunk_frames
         self.target_chunk_s = target_chunk_ms * 1e-3
         self.max_pending = max_pending
@@ -300,13 +350,23 @@ class AsyncSpartusServer:
     # -- client API ----------------------------------------------------------
 
     async def stream(self, feats: Optional[np.ndarray] = None, *,
-                     want_partials: bool = True) -> StreamHandle:
-        """Open a streaming session; awaits while the admission queue is
-        full (backpressure).  ``feats`` optionally seeds initial frames."""
+                     want_partials: bool = True,
+                     token: Optional[str] = None) -> StreamHandle:
+        """Open a streaming session; under the default ``"wait"`` overload
+        policy this awaits while the admission queue is full
+        (backpressure); under ``"shed"`` it raises `AdmissionShed` instead.
+        ``feats`` optionally seeds initial frames.  ``token`` makes the
+        open idempotent: re-opening with a token that already names a live
+        stream returns the SAME handle, so a client retrying after a
+        dropped ack cannot double-admit its utterance."""
         if self._driver is None:
             raise RuntimeError("server is not started")
         if self._stopping:
             raise RuntimeError("server is stopping")
+        if token is not None:
+            existing = self._tokens.get(token)
+            if existing is not None:
+                return existing           # idempotent re-open
         arrival_wall = time.perf_counter()
         if feats is not None:
             # validate BEFORE anything is enqueued: a bad request must be
@@ -314,14 +374,22 @@ class AsyncSpartusServer:
             # trips over later.
             feats = self._validated(feats)
         if self._sem is not None:
+            if self.overload_policy == "shed" and self._sem.locked():
+                if self.obs is not None:
+                    self.obs.fold_shed()
+                raise AdmissionShed(retry_after_ms=max(
+                    self.target_chunk_s * 1e3, 50.0))
             await self._sem.acquire()     # <- the admission-queue bound
         req_id = next(self._ids)
         handle = StreamHandle(self, req_id)
-        cs = _ClientState(req_id, handle, arrival_wall, want_partials)
+        cs = _ClientState(req_id, handle, arrival_wall, want_partials,
+                          token=token)
         if feats is not None:
             cs.buffered.append(feats)
         self._clients[req_id] = cs
         self._waiting.append(cs)
+        if token is not None:
+            self._tokens[token] = handle
         if want_partials:
             self._n_partial_subs += 1
         self._wake.set()
@@ -362,19 +430,36 @@ class AsyncSpartusServer:
     # moves them into the pool at the next boundary:
 
     def _validated(self, frames: np.ndarray, already: int = 0) -> np.ndarray:
-        """Shape/dim/size checks at the client boundary, so malformed
-        input raises in the offending client's call and can never reach
-        the pool (where it would crash the shared driver)."""
-        block = _as_frames(frames)
-        if block.shape[-1] != self.pool.engine.input_dim:
-            raise ValueError(
-                f"frames must have feature dim "
-                f"{self.pool.engine.input_dim}, got {block.shape[-1]}")
-        if already + block.shape[0] > self.pool.max_buffer_frames:
-            raise ValueError(
-                f"{already + block.shape[0]} frames would exceed the "
-                f"frame-buffer growth limit (max_buffer_frames="
-                f"{self.pool.max_buffer_frames})")
+        """Shape/dim/dtype/finiteness/size checks at the client boundary,
+        so malformed input raises in the offending client's call — as a
+        typed `BadRequest` — and can never reach the pool (where it would
+        crash the shared driver or, worse, poison a neighbour's chunk)."""
+        try:
+            arr = np.asarray(frames)
+            if arr.dtype.kind not in "fiu":
+                raise BadRequest(
+                    f"frames have unsupported dtype {arr.dtype} "
+                    f"(expected a float or integer array)")
+            block = _as_frames(arr)
+            if block.shape[-1] != self.pool.engine.input_dim:
+                raise BadRequest(
+                    f"frames must have feature dim "
+                    f"{self.pool.engine.input_dim}, got {block.shape[-1]}")
+            if not np.isfinite(block).all():
+                raise BadRequest("frames contain NaN/Inf values")
+            if already + block.shape[0] > self.pool.max_buffer_frames:
+                raise BadRequest(
+                    f"{already + block.shape[0]} frames would exceed the "
+                    f"frame-buffer growth limit (max_buffer_frames="
+                    f"{self.pool.max_buffer_frames})")
+        except BadRequest:
+            if self.obs is not None:
+                self.obs.fold_bad_request()
+            raise
+        except ValueError as exc:       # _as_frames' shape complaint
+            if self.obs is not None:
+                self.obs.fold_bad_request()
+            raise BadRequest(str(exc)) from exc
         return block
 
     def _client_send(self, req_id: int, frames: np.ndarray) -> None:
@@ -385,6 +470,7 @@ class AsyncSpartusServer:
         already = (sum(b.shape[0] for b in cs.buffered)
                    + (self.pool._live(req_id).n_recv if in_pool else 0))
         cs.buffered.append(self._validated(frames, already))
+        cs.last_activity = time.perf_counter()
         self._dirty.add(req_id)
         self._wake.set()
 
@@ -393,6 +479,7 @@ class AsyncSpartusServer:
         if cs is None or cs.cancelled:
             return
         cs.closed = True
+        cs.last_activity = time.perf_counter()
         self._dirty.add(req_id)
         self._wake.set()
 
@@ -491,6 +578,8 @@ class AsyncSpartusServer:
         """Drop driver-side bookkeeping for a client leaving the server."""
         self._dirty.discard(cs.req_id)
         self._lagging.discard(cs.req_id)
+        if cs.token is not None:
+            self._tokens.pop(cs.token, None)
         if cs.want_partials:
             self._n_partial_subs -= 1
 
@@ -617,27 +706,49 @@ class AsyncSpartusServer:
 
     async def _drive_loop(self) -> None:
         loop = asyncio.get_running_loop()
-        pool = self.pool
         while True:
+            # re-read the pool EVERY iteration: the watchdog swaps it out
+            # under our feet on recovery, and a cached local would tick a
+            # dead pool forever.
+            pool = self.pool
             self._wake.clear()
             self._pump()
             self._service_lagging()
+            self._reap_idle()
             if not self._has_work():
                 if self._stopping and not self._clients and \
                         not self._waiting:
                     break
-                await self._wake.wait()
+                if self.idle_timeout_s is not None:
+                    # poll so the reaper runs even with zero client
+                    # activity (a wholly silent fleet still times out):
+                    try:
+                        await asyncio.wait_for(
+                            self._wake.wait(),
+                            timeout=max(self.idle_timeout_s / 4, 0.01))
+                    except asyncio.TimeoutError:
+                        pass
+                else:
+                    await self._wake.wait()
                 continue
             t0 = loop.time()
-            if self._exec is not None:
-                finished, adv = await loop.run_in_executor(
-                    self._exec, pool.tick, self.now)
-            else:
-                finished, adv = pool.tick(self.now)
+            try:
+                if self._exec is not None:
+                    finished, adv = await loop.run_in_executor(
+                        self._exec, pool.tick, self.now)
+                else:
+                    finished, adv = pool.tick(self.now)
+            except asyncio.CancelledError:
+                raise
+            except Exception as exc:
+                if not self.watchdog or \
+                        self.n_recoveries >= self.max_recoveries:
+                    raise       # -> _drive fails every client, loudly
+                finished, adv = self._recover(exc)
             self.now += max(adv, 1)
             self._steps += adv
             with self._tracer.span("delivery_pump"):
-                self._deliver(pool.take_partials(), finished)
+                self._deliver(self.pool.take_partials(), finished)
             if self.obs is not None:
                 self._fold_loop_side(dispatched=adv > 0)
             with self._tracer.span("pacing_idle"):
@@ -648,6 +759,115 @@ class AsyncSpartusServer:
                     await asyncio.sleep(delay if delay > 0 else 0)
                 else:
                     await asyncio.sleep(0)  # free-run, but stay preemptible
+
+    # -- robustness ----------------------------------------------------------
+
+    def _reap_idle(self) -> None:
+        """Cancel sessions whose client has gone silent past
+        ``idle_timeout_s`` — the slot frees, the handle fails with a
+        retriable `SessionTimeout`.  Closed streams are exempt: their
+        client finished sending and is legitimately waiting on the pool."""
+        if self.idle_timeout_s is None or not self._clients:
+            return
+        now = time.perf_counter()
+        for cs in list(self._clients.values()):
+            if cs.closed or cs.cancelled:
+                continue
+            if now - cs.last_activity < self.idle_timeout_s:
+                continue
+            if cs.admitted:
+                try:
+                    self.pool.cancel(cs.req_id)
+                except KeyError:
+                    pass                 # already resolving
+            else:
+                try:
+                    self._waiting.remove(cs)
+                except ValueError:
+                    pass
+            if self.obs is not None:
+                self.obs.fold_timeouts(1)
+            self._settle_error(cs, SessionTimeout(
+                f"session {cs.req_id} idle for >= {self.idle_timeout_s}s"))
+
+    def _recover(self, exc: Exception):
+        """Watchdog: the tick raised.  Salvage every session the device
+        state still covers (serving/checkpoint.py snapshot), rebuild the
+        pool, restore them, and resume — only the unsalvageable sessions
+        fail, each with a retriable `DriverRecovered`.
+
+        Deliberately a *sync* method called from the driver coroutine: the
+        gathered device fetch inside is the recovery path, not the hot
+        loop, and the loop SHOULD stall here — there is no pool to serve
+        until the rebuild finishes."""
+        from repro.serving import checkpoint as ckptlib
+        t_rec = time.perf_counter()
+        self.n_recoveries += 1
+        old = self.pool
+        if self.obs is not None and not isinstance(exc, InjectedFault):
+            # injected faults were already folded by SessionPool._fire
+            self.obs.fold_fault("driver")
+        finished: List[RequestResult] = []
+        failed: Dict[int, Exception] = {}
+        # 1. resolve what the previous chunk already computed — those
+        #    fetches were dispatched before the crash and are intact:
+        try:
+            finished.extend(old.flush())
+        except Exception:
+            pass    # the fetch itself was poisoned; those sessions fail
+            #         below when their snapshots fail too
+        # 2. snapshot the survivors: whole-pool first (one gathered
+        #    fetch), per-session on failure so one poisoned slot doesn't
+        #    take the rest down with it:
+        snaps = []
+        try:
+            snaps = list(ckptlib.snapshot_pool(old).sessions)
+        except Exception:
+            for req_id in list(old._by_req):
+                try:
+                    snaps.append(ckptlib.snapshot_session(old, req_id))
+                except Exception as sub:
+                    failed[req_id] = sub
+        # 3. fresh pool, same shape (max_frames tracks the old pool's
+        #    grown bucket so restore never needs a regrow):
+        kwargs = dict(self._pool_kwargs)
+        kwargs["max_frames"] = old.pool_config()["max_frames"]
+        new = SessionPool(self._engine, self.capacity, **kwargs)
+        new.n_dispatches = old.n_dispatches          # stats continuity
+        new._overlap_fracs = list(old._overlap_fracs)
+        restored = []
+        for snap in snaps:
+            try:
+                new.restore_session(snap)
+                restored.append(snap)
+            except Exception as sub:
+                failed[snap.req_id] = sub
+        self.pool = new
+        # 4. restored streams with undelivered partial rows: mark them
+        #    lagging so _service_lagging backfills [delivered_t, cursor)
+        #    from the new pool's logits bank in one catch-up fetch:
+        for snap in restored:
+            cs = self._clients.get(snap.req_id)
+            if cs is not None and cs.want_partials and not cs.lagging:
+                cs.lagging = True
+                self._lagging.add(cs.req_id)
+                try:
+                    new.pause_partials(cs.req_id)
+                except KeyError:
+                    pass
+        # 5. the unsalvageable fail individually — retriable, the server
+        #    is alive again:
+        for req_id, sub in failed.items():
+            cs = self._clients.get(req_id)
+            if cs is not None:
+                self._settle_error(cs, DriverRecovered(
+                    f"session {req_id} lost in driver recovery "
+                    f"({type(exc).__name__}: {exc}); cause: {sub}"))
+        if self.obs is not None:
+            self.obs.fold_recovery(
+                salvaged=len(restored), lost=len(failed),
+                seconds=time.perf_counter() - t_rec)
+        return finished, 0
 
     # -- observability -------------------------------------------------------
 

@@ -440,6 +440,15 @@ class PoolObservability:
         ``spartus_truncated_total``       results delivered, truncated
         ``spartus_cancelled_total``       sessions reaped by cancel()
         ``spartus_timeseries_dropped_total``  ring-buffer evictions
+        ``spartus_faults_total{site=}``   faults observed, by site
+        ``spartus_shed_total``            admissions shed under overload
+        ``spartus_idle_timeouts_total``   sessions reaped by idle timeout
+        ``spartus_bad_requests_total``    payloads rejected by validation
+        ``spartus_recoveries_total``      watchdog pool rebuilds
+        ``spartus_sessions_salvaged_total``  sessions restored by recovery
+        ``spartus_sessions_lost_total``   sessions failed by recovery
+        ``spartus_checkpoints_total``     pool checkpoints written
+        ``spartus_sessions_restored_total``  sessions restored from ckpt
     gauges
         ``spartus_occupancy``             occupied slots at the boundary
         ``spartus_active_fraction``       active slots / capacity
@@ -453,6 +462,7 @@ class PoolObservability:
         ``spartus_dispatch_seconds``      dispatch call wall time
         ``spartus_chunk_seconds``         full boundary wall time
         ``spartus_chunk_advance_frames``  frames advanced per chunk
+        ``spartus_restore_seconds``       checkpoint/restore wall time
     """
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
@@ -501,6 +511,33 @@ class PoolObservability:
         self.h_advance = r.histogram(
             "spartus_chunk_advance_frames", "frames advanced per chunk",
             buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+        # robustness layer (docs/robustness.md): fault/shed/timeout
+        # counters, recovery outcome counters, restore-latency histogram.
+        self.c_shed = r.counter(
+            "spartus_shed_total", "admissions shed under overload")
+        self.c_timeouts = r.counter(
+            "spartus_idle_timeouts_total",
+            "sessions reaped by the idle timeout")
+        self.c_bad_requests = r.counter(
+            "spartus_bad_requests_total",
+            "payloads rejected by admission validation")
+        self.c_recoveries = r.counter(
+            "spartus_recoveries_total", "driver watchdog pool rebuilds")
+        self.c_salvaged = r.counter(
+            "spartus_sessions_salvaged_total",
+            "sessions checkpoint-restored by a watchdog recovery")
+        self.c_lost = r.counter(
+            "spartus_sessions_lost_total",
+            "sessions a watchdog recovery could not salvage")
+        self.c_checkpoints = r.counter(
+            "spartus_checkpoints_total", "pool checkpoints written")
+        self.c_restored = r.counter(
+            "spartus_sessions_restored_total",
+            "sessions restored from a checkpoint")
+        self.h_restore = r.histogram(
+            "spartus_restore_seconds",
+            "checkpoint snapshot / restore wall time")
+        self._fault_counters: Dict[str, Counter] = {}
         # boundary-fold state: the previous boundary's (not-yet-fetched)
         # telemetry totals and the last fetched values for diffing.
         self._chunk_seq = 0
@@ -525,6 +562,50 @@ class PoolObservability:
     def fold_cancelled(self, n: int) -> None:
         if n:
             self.c_cancelled.inc(n)
+
+    # -- robustness-layer hooks (serving/faults.py, serving/checkpoint.py,
+    #    the async watchdog / reaper / shed paths) --------------------------
+
+    def fold_fault(self, site: str) -> None:
+        """Count one observed fault at ``site`` (labelled counter,
+        get-or-create like the per-shard load gauges)."""
+        c = self._fault_counters.get(site)
+        if c is None:
+            c = self.registry.counter(
+                "spartus_faults_total", "faults observed, by site",
+                labels={"site": site})
+            self._fault_counters[site] = c
+        c.inc()
+
+    def fold_shed(self) -> None:
+        self.c_shed.inc()
+
+    def fold_timeouts(self, n: int) -> None:
+        if n:
+            self.c_timeouts.inc(n)
+
+    def fold_bad_request(self) -> None:
+        self.c_bad_requests.inc()
+
+    def fold_checkpoint(self, *, n_sessions: int, seconds: float) -> None:
+        self.c_checkpoints.inc()
+        self.h_restore.observe(seconds)
+
+    def fold_restore(self, *, n_sessions: int, seconds: float) -> None:
+        if n_sessions:
+            self.c_restored.inc(n_sessions)
+        self.h_restore.observe(seconds)
+
+    def fold_recovery(self, *, salvaged: int, lost: int,
+                      seconds: float) -> None:
+        """One watchdog recovery: pool rebuilt, ``salvaged`` sessions
+        restored, ``lost`` sessions failed with a retriable error."""
+        self.c_recoveries.inc()
+        if salvaged:
+            self.c_salvaged.inc(salvaged)
+        if lost:
+            self.c_lost.inc(lost)
+        self.h_restore.observe(seconds)
 
     # -- the per-boundary fold ----------------------------------------------
 

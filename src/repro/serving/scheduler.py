@@ -75,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
+from repro.serving.faults import FaultInjector
 from repro.serving.metrics import NULL_TRACER, PoolObservability
 from repro.serving import sharding as shardlib
 from repro.serving import telemetry as tele
@@ -132,6 +133,33 @@ def _device_append(
     frames = frames.at[slots].set(upd, mode="drop")
     lengths = lengths.at[slots].set(ts, mode="drop")
     return frames, lengths
+
+
+def validated_frames(feats, req_id: int,
+                     input_dim: Optional[int] = None) -> np.ndarray:
+    """Admission-time payload validation (shared by ``admit``,
+    ``append_frames`` and the async server): reject non-numeric dtypes
+    and NaN/Inf values with a clear ValueError BEFORE the frames reach
+    the shared device batch — one poisoned utterance must never corrupt
+    neighbour sessions' logits.  Returns the float32 frame array.
+
+    Host-side and admission-only: the isfinite scan runs once per
+    received frame block, never per tick, so the hot path is untouched.
+    """
+    arr = np.asarray(feats)
+    if arr.dtype.kind not in "fiu":
+        raise ValueError(
+            f"request {req_id}: frames have unsupported dtype {arr.dtype} "
+            f"(expected a float or integer array)")
+    arr = np.asarray(arr, np.float32)
+    if input_dim is not None and arr.size and arr.shape[-1] != input_dim:
+        raise ValueError(
+            f"request {req_id}: feature dim {arr.shape[-1]} != "
+            f"engine input dim {input_dim}")
+    if not np.isfinite(arr).all():
+        raise ValueError(
+            f"request {req_id}: frames contain NaN/Inf values")
+    return arr
 
 
 @dataclasses.dataclass
@@ -410,7 +438,8 @@ class SessionPool:
                  max_buffer_frames: Optional[int] = None,
                  stream_partials: bool = False,
                  n_devices: Optional[int] = None,
-                 observability: Optional[PoolObservability] = None):
+                 observability: Optional[PoolObservability] = None,
+                 faults: Optional[FaultInjector] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if chunk_frames < 0:
@@ -428,6 +457,11 @@ class SessionPool:
                 f"{self.max_buffer_frames}")
         # slot-dimension data parallelism (None = single-device layout,
         # bit-for-bit the pre-sharding pool):
+        self._n_devices = n_devices
+        # seeded fault-injection hook (serving/faults.py): `_fire(site)`
+        # raises InjectedFault at the scheduled invocations; None = off,
+        # zero cost (one attribute check per boundary, nothing compiled)
+        self.faults = faults
         self._mesh = (shardlib.make_pool_mesh(int(n_devices))
                       if n_devices is not None else None)
         self.n_shards = (shardlib.n_pool_shards(self._mesh, capacity)
@@ -491,6 +525,25 @@ class SessionPool:
         # (dispatch + rebind) atomic and reading under the same lock means
         # readers only ever see the live (possibly in-flight) state.
         self._state_lock = threading.Lock()
+
+    def _fire(self, site: str) -> None:
+        """Fault-injection hook: raise if the plan scheduled a failure at
+        this invocation of ``site``.  A ``"poison"`` payload additionally
+        invalidates the device state first — modelling a crash *after* a
+        dispatch donated the buffers away, so per-slot salvage must fail
+        and the watchdog's lost-session path is exercised."""
+        if self.faults is None:
+            return
+        try:
+            self.faults.fire(site)
+        except Exception as exc:
+            if self.obs is not None:
+                self.obs.fold_fault(site)
+            if getattr(exc, "payload", None) == "poison":
+                with self._state_lock:
+                    for leaf in jax.tree_util.tree_leaves(self.state):
+                        leaf.delete()
+            raise
 
     def _dev1d(self, arr: np.ndarray) -> jax.Array:
         """Place a per-slot host vector (active/reset masks, chunk-start
@@ -557,7 +610,7 @@ class SessionPool:
         fit the frame buffers (``max_buffer_frames``)."""
         if request.n_frames == 0:
             raise ValueError(f"request {request.req_id} has no frames")
-        feats = np.asarray(request.feats, np.float32)
+        feats = validated_frames(request.feats, request.req_id)
         return self._bind(request.req_id, request.arrival_step, now, feats,
                           total=request.n_frames, arrival_wall=arrival_wall)
 
@@ -571,7 +624,7 @@ class SessionPool:
         the utterance.  The session idles (masked out, free) whenever it
         has consumed everything received."""
         feats = (np.zeros((0, self.engine.input_dim), np.float32)
-                 if feats is None else np.asarray(feats, np.float32))
+                 if feats is None else validated_frames(feats, req_id))
         return self._bind(req_id, now if arrival_step is None else
                           arrival_step, now, feats, total=None,
                           arrival_wall=arrival_wall)
@@ -654,7 +707,7 @@ class SessionPool:
             raise ValueError(f"request {req_id} is already finished")
         if sess.cancelled:
             raise ValueError(f"request {req_id} was cancelled")
-        feats = np.asarray(feats, np.float32)
+        feats = validated_frames(feats, req_id)
         if feats.ndim != 2 or feats.shape[-1] != self.engine.input_dim:
             raise ValueError(
                 f"request {req_id}: appended frames must be [n, "
@@ -811,6 +864,7 @@ class SessionPool:
         frames are copied device->device — never re-staged from host.
         Growth recompiles the step for the new bucket, so drivers pre-size
         ``max_frames`` to the longest known utterance."""
+        self._fire("admission_upload")
         appends = self._merged_appends()
         a_pad = (_frame_bucket(max(f.shape[0] for _, _, f in appends),
                                floor=1) if appends else 0)
@@ -877,6 +931,7 @@ class SessionPool:
             return []
         with self._tracer.span("admission_upload"):
             self._flush_uploads()
+        self._fire("dispatch")
 
         t0 = time.perf_counter()
         with self._tracer.span("dispatch"), self._state_lock:
@@ -967,6 +1022,7 @@ class SessionPool:
                            for s in self._slots], np.int32)
         with self._tracer.span("admission_upload"):
             self._flush_uploads()
+        self._fire("dispatch")
 
         t0 = time.perf_counter()
         with self._tracer.span("dispatch"), self._state_lock:
@@ -1195,6 +1251,62 @@ class SessionPool:
         # current chunk completes, which is the intended sync point).
         with self._state_lock:
             return self.engine.measured_sparsity(self.state)
+
+    # -- checkpoint / restore (serving/checkpoint.py) ------------------------
+
+    def pool_config(self) -> Dict[str, object]:
+        """Constructor kwargs that rebuild an equivalent (empty) pool —
+        the watchdog's recovery recipe.  ``max_frames`` reports the
+        CURRENT buffer bucket so the rebuilt pool needs no regrow (and
+        therefore no step recompile) to receive the restored sessions."""
+        return dict(
+            capacity=self.capacity,
+            max_frames=self._t_buf,
+            chunk_frames=self.chunk_frames,
+            max_buffer_frames=self.max_buffer_frames,
+            stream_partials=self.stream_partials,
+            n_devices=self._n_devices,
+        )
+
+    def snapshot(self):
+        """In-memory whole-pool snapshot (``PoolCheckpoint``): every live
+        session in one gathered D2H fetch.  Call ``flush()`` first if the
+        double-buffer tail must be resolved rather than dropped."""
+        from repro.serving import checkpoint as ckptlib
+
+        return ckptlib.snapshot_pool(self)
+
+    def snapshot_session(self, req_id: int):
+        """Serialize one live session (``SessionSnapshot``) in a single
+        gathered fetch of its slot's rows."""
+        from repro.serving import checkpoint as ckptlib
+
+        return ckptlib.snapshot_session(self, req_id)
+
+    def restore_session(self, snap) -> bool:
+        """Restore one ``SessionSnapshot`` into a free slot; False when
+        the pool is full.  The session continues bit-identically — slot
+        index, capacity and shard count are placement, not semantics."""
+        from repro.serving import checkpoint as ckptlib
+
+        return ckptlib.restore_session(self, snap)
+
+    def checkpoint(self, path: str) -> List[RequestResult]:
+        """Write the whole pool to a checkpoint directory (atomic,
+        committed, retained — `training.checkpoint.CheckpointManager`).
+        Flushes the double-buffer tail first and returns those finished
+        results: completed sessions belong to the caller, not the file."""
+        from repro.serving import checkpoint as ckptlib
+
+        return ckptlib.save_pool(self, path)
+
+    def restore(self, path: str, step: Optional[int] = None) -> None:
+        """Load a pool checkpoint into THIS (fresh, empty) pool.  The
+        shard count and capacity may differ from the writer's — this is
+        the migration primitive for rebalancing and preemption recovery."""
+        from repro.serving import checkpoint as ckptlib
+
+        ckptlib.restore_into(self, ckptlib.load_checkpoint(path, step))
 
 
 RequestLike = Union[StreamRequest, Tuple[int, np.ndarray]]

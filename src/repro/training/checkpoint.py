@@ -29,7 +29,13 @@ import jax
 import numpy as np
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
+def flatten_tree(tree) -> Dict[str, np.ndarray]:
+    """Flatten any pytree to path-keyed host arrays (``"/"``-joined keys).
+
+    Public because the serving checkpoint path (serving/checkpoint.py)
+    rides the same machinery: a flat ``Dict[str, np.ndarray]`` is itself a
+    pytree whose flatten keys are the dict keys, so pool snapshots go
+    through ``CheckpointManager.save`` unchanged."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
@@ -38,7 +44,10 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return out
 
 
-def _unflatten_into(tree, arrays: Dict[str, np.ndarray]):
+_flatten = flatten_tree  # back-compat alias
+
+
+def unflatten_into(tree, arrays: Dict[str, np.ndarray]):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     leaves = []
     for path, leaf in flat:
@@ -50,6 +59,9 @@ def _unflatten_into(tree, arrays: Dict[str, np.ndarray]):
             raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+_unflatten_into = unflatten_into  # back-compat alias
 
 
 class CheckpointManager:
@@ -133,13 +145,24 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, template) -> Tuple[Any, Dict[str, Any]]:
+    def restore_arrays(
+        self, step: int
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """Raw ``(arrays, meta)`` of one committed step — no template.
+
+        This is the restore surface for consumers whose array set is not
+        known ahead of time (the serving pool checkpoint stores a variable
+        number of sessions; the session list lives in the metadata)."""
         path = os.path.join(self.dir, f"step_{step:09d}")
         npz = np.load(os.path.join(path, f"proc{self.process_index}.npz"))
         arrays = {k: npz[k] for k in npz.files}
         with open(os.path.join(path, f"meta{self.process_index}.json")) as f:
             meta = json.load(f)
-        return _unflatten_into(template, arrays), meta
+        return arrays, meta
+
+    def restore(self, step: int, template) -> Tuple[Any, Dict[str, Any]]:
+        arrays, meta = self.restore_arrays(step)
+        return unflatten_into(template, arrays), meta
 
     def restore_latest(self, template):
         """(tree, meta, step) or (template, {}, None) if no checkpoint."""
