@@ -24,7 +24,13 @@ identical (atol 1e-5) to the batch-1 engine's.
         and fails if chunk_frames=32 is slower than per-frame (the
         dispatch-amortisation gate), and the async open-loop leg, failing
         if the async front-end's sustained (saturated) throughput drops
-        below ASYNC_FLOOR x the synchronous chunked pool
+        below ASYNC_FLOOR x the synchronous chunked pool, and the
+        quantized leg (int8 weights + Q8.8 delta thresholds): parity vs
+        the quantized batch-1 engine, max-abs logit divergence vs the
+        fp32 pool under QUANT_DIVERGENCE_BOUND, and the 4x int8 weight-
+        payload shrink (QUANT_PAYLOAD_FLOOR)
+    PYTHONPATH=src python benchmarks/serving_bench.py --quant  # that
+        quantized leg alone, at the CLI's model config
 
 Runs on CPU: the batch-1 engine pays ~8 XLA dispatches + 3 host syncs per
 (frame, layer) while the pool amortises one dispatch + one logits fetch
@@ -58,8 +64,11 @@ from repro.serving import (
 #: top-level row by `_write_report`, which refuses to mix versions —
 #: downstream consumers (CI artifact diffing, dashboards) can trust that
 #: one file means one schema.  v2 added the observability rows
-#: (`obs_overhead`) and the per-row stamp itself.
-SCHEMA_VERSION = 2
+#: (`obs_overhead`) and the per-row stamp itself.  v3 added the quantized
+#: leg (`quant_*` rows: divergence vs fp32, weight-payload ratio,
+#: bytes-per-slot and the equal-bytes capacity) and `bytes_per_slot`
+#: inside every ServeStats dict.
+SCHEMA_VERSION = 3
 
 
 def _write_report(path: str, report: dict) -> None:
@@ -475,6 +484,106 @@ def bench_sharded(layers: int, input_dim: int, classes: int, frames: int,
     return report, parity_ok, shard4
 
 
+def bench_quant(hidden: int, layers: int, input_dim: int, classes: int,
+                frames: int, n_requests: int, cap: int, theta: float,
+                gamma: float, m: int, capacity_frac: float, chunk: int):
+    """Quantized-serving leg: the same pooled workload with int8 CBCSC
+    weight payloads + Q8.8 delta thresholds vs the fp32 pool.
+
+    Three gates ride on one pair of runs (docs/quantization.md):
+
+    - **parity**: the quantized pool must match the quantized batch-1
+      engine (the scale-epilogue dequant is the same arithmetic in both,
+      so pooling may not perturb quantized logits any more than fp32);
+    - **divergence**: max-abs logit difference between the quantized and
+      fp32 pools stays under ``QUANT_DIVERGENCE_BOUND`` — the only
+      quant-mode divergence source is the Q8.8 activation snap in the
+      delta threshold (measured ~5e-4 at this config; the bound leaves
+      two orders of headroom so model-seed drift cannot flake CI);
+    - **memory**: the int8 weight *payload* (CBCSC values + 8-bit LIDX +
+      the dense mirrors) must shrink by at least ``QUANT_PAYLOAD_FLOOR``
+      (exactly 4.0x by construction; total weight bytes shrink less
+      because the fp32 head, biases and valid masks do not quantize).
+
+    The report also prices the saving as capacity: ``equal_bytes_
+    capacity`` is the slot count the quantized pool could host in the
+    fp32 pool's device-byte budget (weight saving divided by the
+    per-slot state cost).  Returns (report dict, gate_ok)."""
+    from repro.core.quantization import QuantConfig
+
+    params, cfg = build_model(hidden, layers, input_dim, classes, gamma, m)
+    ecfg_f = EngineConfig(theta=theta, gamma=gamma, m=m,
+                          capacity_frac=capacity_frac)
+    ecfg_q = EngineConfig(theta=theta, gamma=gamma, m=m,
+                          capacity_frac=capacity_frac, quant=QuantConfig())
+    eb_f = BatchedSpartusEngine(params, cfg, ecfg_f)
+    eb_q = BatchedSpartusEngine(params, cfg, ecfg_q)
+    e1_q = SpartusEngine(params, cfg, ecfg_q)
+    reqs = make_requests(n_requests, frames, input_dim)
+
+    for eb in (eb_f, eb_q):     # warm: full admission wave, full length
+        serve_requests(eb, [StreamRequest(i, 0, reqs[0].feats)
+                            for i in range(cap)], cap, chunk_frames=chunk)
+    f_results, f_stats = serve_requests(eb_f, reqs, capacity=cap,
+                                        chunk_frames=chunk)
+    q_results, q_stats = serve_requests(eb_q, reqs, capacity=cap,
+                                        chunk_frames=chunk)
+
+    # parity: quantized pool vs the quantized batch-1 oracle
+    e1_q.run_utterance(jnp.asarray(reqs[0].feats[:2]))  # compile
+    parity_ok = True
+    for r in q_results:
+        ref = np.asarray(e1_q.run_utterance(jnp.asarray(reqs[r.req_id].feats)))
+        if not np.allclose(r.logits, ref, atol=1e-5):
+            parity_ok = False
+            print(f"[bench] QUANT PARITY FAIL req {r.req_id}")
+
+    # divergence: quantized pool vs the fp32 pool, same requests
+    f_by_id = {r.req_id: r for r in f_results}
+    divergence = max(
+        float(np.max(np.abs(np.asarray(r.logits, np.float32)
+                            - np.asarray(f_by_id[r.req_id].logits,
+                                         np.float32))))
+        for r in q_results)
+
+    w_f, w_q = eb_f.weight_bytes(), eb_q.weight_bytes()
+    p_f, p_q = eb_f.weight_payload_bytes(), eb_q.weight_payload_bytes()
+    payload_ratio = p_f / p_q if p_q else 0.0
+    total_ratio = w_f / w_q if w_q else 0.0
+    # price the weight saving as extra capacity at the fp32 byte budget:
+    state_per_slot = q_stats.bytes_per_slot - w_q / cap
+    equal_bytes_cap = (int(cap + (w_f - w_q) / state_per_slot)
+                       if state_per_slot > 0 else cap)
+
+    row = {
+        "hidden": hidden, "m": m, "capacity": cap, "chunk_frames": chunk,
+        "fp32_frames_per_s": f_stats.frames_per_s,
+        "quant_frames_per_s": q_stats.frames_per_s,
+        "fp32_bytes_per_slot": f_stats.bytes_per_slot,
+        "quant_bytes_per_slot": q_stats.bytes_per_slot,
+        "fp32_weight_bytes": w_f, "quant_weight_bytes": w_q,
+        "fp32_weight_payload_bytes": p_f, "quant_weight_payload_bytes": p_q,
+        "weight_payload_ratio": payload_ratio,
+        "weight_total_ratio": total_ratio,
+        "equal_bytes_capacity": equal_bytes_cap,
+        "max_abs_logit_divergence": divergence,
+        "divergence_bound": QUANT_DIVERGENCE_BOUND,
+    }
+    diverged = divergence > QUANT_DIVERGENCE_BOUND
+    shrunk = payload_ratio >= QUANT_PAYLOAD_FLOOR
+    ok = parity_ok and not diverged and shrunk
+    print(f"[bench] quant hidden={hidden} cap={cap} chunk={chunk}: "
+          f"{q_stats.frames_per_s:8.0f} frames/s "
+          f"(fp32 {f_stats.frames_per_s:8.0f}), divergence "
+          f"{divergence:.2e} (bound {QUANT_DIVERGENCE_BOUND}), payload "
+          f"{payload_ratio:.2f}x / total {total_ratio:.2f}x smaller, "
+          f"slot {q_stats.bytes_per_slot/1e3:.0f} kB vs "
+          f"{f_stats.bytes_per_slot/1e3:.0f} kB "
+          f"(equal-bytes capacity {equal_bytes_cap}) -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    return row, ok
+
+
 # sweep legs: (hidden, spmv_path).  The auto legs pin the dense-mirror route
 # (every gated config has S*(1-gamma) >= 1); the forced-scatter leg pins the
 # scatter kernels, which auto would otherwise never exercise here.
@@ -521,6 +630,14 @@ SHARD_MIN_CPUS = 4
 # best-of-N off/on pairs:
 OBS_FLOOR = 0.97
 OBS_MIN_FRAMES = 16384
+# quantized leg: max-abs logit divergence of the int8/Q8.8 pool vs the
+# fp32 pool (sole source: the Q8.8 activation snap in the delta
+# threshold; measured ~5e-4 at hidden=128 / m=16 / gamma=0.9375 — the
+# bound leaves ~100x headroom), and the floor on the weight-payload
+# shrink (CBCSC values + LIDX + dense mirrors quantize 4.0x exactly;
+# 3.5 tolerates any future payload bookkeeping change):
+QUANT_DIVERGENCE_BOUND = 0.05
+QUANT_PAYLOAD_FLOOR = 3.5
 
 
 def _sharded_gate(shard4, parity_ok) -> bool:
@@ -581,6 +698,12 @@ def main() -> int:
                          "(run under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8; the "
                          "multi-device CI job does)")
+    ap.add_argument("--quant", action="store_true",
+                    help="quantized leg only: int8 weight payloads + Q8.8 "
+                         "delta thresholds vs the fp32 pool; exit 1 on "
+                         "parity failure, logit divergence > "
+                         f"{QUANT_DIVERGENCE_BOUND}, or a weight-payload "
+                         f"shrink under {QUANT_PAYLOAD_FLOOR}x")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--emit-json", metavar="PATH", default=None,
                     help="write the report as JSON (--sweep defaults to "
@@ -588,9 +711,9 @@ def main() -> int:
     args = ap.parse_args()
 
     if args.sweep:
-        if args.check or args.sharded:
+        if args.check or args.sharded or args.quant:
             ap.error("--sweep already includes the other gates; drop "
-                     "--check/--sharded")
+                     "--check/--sharded/--quant")
         if args.m != ap.get_default("m") or \
                 args.capacities != ap.get_default("capacities") or \
                 args.chunk_frames != ap.get_default("chunk_frames"):
@@ -674,6 +797,14 @@ def main() -> int:
             m=16, capacity_frac=args.capacity_frac, chunk=cmax)
         ok = ok and ook
         report["obs_overhead"] = orow
+        # quantized leg: int8 weights + Q8.8 activations at the chunked
+        # config — divergence-gated vs the fp32 pool, payload-ratio gated:
+        qrow, qok = bench_quant(
+            SWEEP_CHUNK_HIDDEN, args.layers, args.input_dim, args.classes,
+            args.frames, args.requests, SWEEP_CAP, args.theta, args.gamma,
+            m=16, capacity_frac=args.capacity_frac, chunk=cmax)
+        ok = ok and qok
+        report[f"quant_hidden_{SWEEP_CHUNK_HIDDEN}"] = qrow
         if args.json:
             print(json.dumps(report, indent=2))
         _write_report(emit, report)
@@ -698,6 +829,20 @@ def main() -> int:
             print(json.dumps(report, indent=2))
         _write_report(emit, report)
         return 0 if sgate else 1
+
+    if args.quant:
+        chunk = args.chunk_frames or 32
+        cap = max(int(c) for c in args.capacities.split(","))
+        row, ok = bench_quant(
+            args.hidden, args.layers, args.input_dim, args.classes,
+            args.frames, args.requests, cap, args.theta, args.gamma,
+            args.m, args.capacity_frac, chunk=chunk)
+        report = {f"quant_hidden_{args.hidden}": row}
+        if args.json:
+            print(json.dumps(report, indent=2))
+        if args.emit_json:
+            _write_report(args.emit_json, report)
+        return 0 if ok else 1
 
     if args.obs_overhead:
         chunk = args.chunk_frames or 32

@@ -77,7 +77,9 @@ class ContractCase:
 
 
 @functools.lru_cache(maxsize=None)
-def _engine(spmv_path: str = "auto", use_pallas: bool = False):
+def _engine(spmv_path: str = "auto", use_pallas: bool = False,
+            quant: bool = False):
+    from repro.core.quantization import QuantConfig
     from repro.models import lstm_am
     from repro.serving import BatchedSpartusEngine, EngineConfig
 
@@ -86,7 +88,8 @@ def _engine(spmv_path: str = "auto", use_pallas: bool = False):
     params = lstm_am.cbtd_prune_stacks(
         lstm_am.init_params(jax.random.key(0), cfg), gamma=GAMMA, m=M)
     ecfg = EngineConfig(theta=THETA, gamma=GAMMA, m=M, capacity_frac=1.0,
-                        use_pallas=use_pallas, spmv_path=spmv_path)
+                        use_pallas=use_pallas, spmv_path=spmv_path,
+                        quant=QuantConfig() if quant else None)
     return BatchedSpartusEngine(params, cfg, ecfg)
 
 
@@ -172,8 +175,8 @@ def _built_step_frames() -> BuiltCase:
                      kwargs={}, donate_argnums=(0,))
 
 
-def _built_step_chunk(spmv_path: str) -> BuiltCase:
-    return built_pool_chunk(_engine(spmv_path), _feats())
+def _built_step_chunk(spmv_path: str, quant: bool = False) -> BuiltCase:
+    return built_pool_chunk(_engine(spmv_path, quant=quant), _feats())
 
 
 def _built_step_chunk_sharded() -> BuiltCase:
@@ -213,8 +216,8 @@ def _built_step_chunk_restored() -> BuiltCase:
     )
 
 
-def _spmv_args(spmv_path: str) -> Tuple[Any, ...]:
-    layer = _engine(spmv_path).layers[0]
+def _spmv_args(spmv_path: str, quant: bool = False) -> Tuple[Any, ...]:
+    layer = _engine(spmv_path, quant=quant).layers[0]
     k = layer.capacity
     idx = jnp.tile(jnp.arange(k, dtype=jnp.int32) %
                    (layer.input_dim + layer.hidden_dim), (4, 1))
@@ -222,28 +225,34 @@ def _spmv_args(spmv_path: str) -> Tuple[Any, ...]:
     return layer, idx, vals
 
 
-def _built_spmv_scatter(use_pallas: bool) -> BuiltCase:
+def _built_spmv_scatter(use_pallas: bool, quant: bool = False) -> BuiltCase:
     from repro.kernels import ops
 
-    layer, idx, vals = _spmv_args("scatter")
+    layer, idx, vals = _spmv_args("scatter", quant=quant)
+    kwargs: Dict[str, Any] = {"s": layer.enc.s, "use_pallas": use_pallas}
+    if quant:
+        kwargs["scale"] = layer.scale   # int8 payload + epilogue dequant
     return BuiltCase(
         fn=ops.stsp_spmv_batch,
         args=(layer.enc.val, layer.enc.lidx, idx, vals),
-        kwargs={"s": layer.enc.s, "use_pallas": use_pallas},
+        kwargs=kwargs,
         donate_argnums=(),
     )
 
 
-def _built_spmv_dense() -> BuiltCase:
+def _built_spmv_dense(quant: bool = False) -> BuiltCase:
     from repro.kernels import ops
 
-    layer, _, _ = _spmv_args("dense")
+    layer, _, _ = _spmv_args("dense", quant=quant)
     delta = jax.random.normal(jax.random.key(7),
                               (4, layer.w_dense_t.shape[0]), jnp.float32)
+    kwargs: Dict[str, Any] = {"capacity": layer.capacity}
+    if quant:
+        kwargs["scale"] = layer.scale
     return BuiltCase(
         fn=ops.delta_spmv_dense_topk_batch,
         args=(layer.w_dense_t, delta),
-        kwargs={"capacity": layer.capacity},
+        kwargs=kwargs,
         donate_argnums=(),
     )
 
@@ -312,6 +321,17 @@ def build_cases(*, include_sharded: Optional[bool] = None) -> List[ContractCase]
                      lambda: _built_spmv_scatter(True)),
         ContractCase("stsp_spmv_batch/dense-mirror", "delta_spmv_dense_topk",
                      _built_spmv_dense),
+        # quantized builds of the same hot paths: int8 weight payloads with
+        # the scale-epilogue dequant must honour every fp32 clause —
+        # donation, zero collectives, op budgets (docs/quantization.md):
+        ContractCase("step_chunk/quant-int8", "step_chunk",
+                     lambda: _built_step_chunk("auto", quant=True),
+                     op_budget_override={"sort": 0}),
+        ContractCase("stsp_spmv_batch/quant-scatter", "stsp_spmv_batch",
+                     lambda: _built_spmv_scatter(False, quant=True)),
+        ContractCase("stsp_spmv_batch/quant-dense-mirror",
+                     "delta_spmv_dense_topk",
+                     lambda: _built_spmv_dense(quant=True)),
         ContractCase("fold_totals", "fold_totals", _built_fold_totals),
         ContractCase("bank_rows", "bank_rows", _built_bank_rows),
         ContractCase("gather_rows", "gather_rows", _built_gather_rows),

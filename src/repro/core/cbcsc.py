@@ -49,7 +49,9 @@ class CBCSC:
     def global_row_idx(self) -> jax.Array:
         """[Q, M, BLEN] row index in the dense matrix: r = lidx*M + i."""
         i = jnp.arange(self.m, dtype=jnp.int32)[None, :, None]
-        return self.lidx * self.m + i
+        # int32 math: the serving pack may hold lidx int8 (paper's 8-bit
+        # LIDX), which would overflow at lidx*M
+        return self.lidx.astype(jnp.int32) * self.m + i
 
     def to_stream(self) -> Tuple[jax.Array, jax.Array]:
         """Alg. 3 element order (for j / for i / for k): 1-D VAL, LIDX."""

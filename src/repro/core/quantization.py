@@ -37,11 +37,17 @@ def pow2_scale_for(w: jax.Array, bits: int) -> jax.Array:
 
 
 def quantize(w: jax.Array, bits: int, scale: Optional[jax.Array] = None) -> jax.Array:
-    """Uniform symmetric fake-quant to ``bits`` with round-to-nearest."""
+    """Uniform symmetric fake-quant to ``bits`` with round-to-nearest.
+
+    The grid is symmetric: codes span [-qmax, qmax], not the full two's
+    complement range.  The per-tensor scale is derived from qmax, so
+    admitting the extra -qmax-1 code would make ``quantize(-w)`` differ
+    from ``-quantize(w)`` for tensors that saturate on the negative side.
+    """
     if scale is None:
         scale = pow2_scale_for(w, bits)
     qmax = 2.0 ** (bits - 1) - 1
-    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
     return q * scale
 
 
@@ -51,7 +57,14 @@ def fake_quant_ste(w: jax.Array, bits: int, scale: Optional[jax.Array] = None) -
 
 
 def quantize_act(x: jax.Array, bits: int = 16, frac_bits: int = 8) -> jax.Array:
-    """Fixed-point Qm.n activation quantization (deterministic scale 2^-n)."""
+    """Fixed-point Qm.n activation quantization (deterministic scale 2^-n).
+
+    Unlike ``quantize``, the grid deliberately keeps the -2^(bits-1)
+    two's-complement endpoint: the scale here is fixed by the format
+    (2^-n), not derived from the data, and the hardware saturating
+    arithmetic clamps to the full signed range.  Values saturate (never
+    wrap) at both endpoints.
+    """
     scale = 2.0 ** (-frac_bits)
     qmax = 2.0 ** (bits - 1) - 1
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
@@ -72,10 +85,15 @@ def quantize_tree(params, bits: int = 8):
 
 
 def int8_pack(w: jax.Array, scale: Optional[jax.Array] = None):
-    """Actual int8 storage (for footprint accounting / serving export)."""
+    """Actual int8 storage (for footprint accounting / serving export).
+
+    Clips to the symmetric [-127, 127] grid to match ``quantize`` — the
+    auto pow2 scale already covers max|w| with code 127, so the clip only
+    binds for a caller-supplied undersized scale.
+    """
     if scale is None:
         scale = pow2_scale_for(w, 8)
-    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 

@@ -12,6 +12,7 @@ per-block count is a scalar write to SMEM-resident output.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +22,20 @@ BLOCK_ROWS = 8
 LANES = 128
 
 
-def _delta_encode_kernel(theta_ref, x_ref, xh_ref, delta_ref, xh_out_ref, nnz_ref):
+def _delta_encode_kernel(
+    theta_ref, x_ref, xh_ref, delta_ref, xh_out_ref, nnz_ref,
+    *, act_bits: Optional[int] = None, act_frac_bits: int = 8,
+):
     x = x_ref[...]
     xh = xh_ref[...]
+    if act_bits is not None:
+        # Snap the incoming state to the Qm.n grid in-register (the DPE's
+        # fixed-point view); xh is already on-grid by induction because
+        # xh_out below stores the quantized x.  Saturating clip, matching
+        # core.quantization.quantize_act (wrapper pre-quantizes theta).
+        scale = 2.0 ** (-act_frac_bits)
+        qmax = 2.0 ** (act_bits - 1) - 1
+        x = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
     raw = x - xh
     fired = jnp.abs(raw) > theta_ref[0]
     delta_ref[...] = jnp.where(fired, raw, jnp.zeros_like(raw))
@@ -31,13 +43,18 @@ def _delta_encode_kernel(theta_ref, x_ref, xh_ref, delta_ref, xh_out_ref, nnz_re
     nnz_ref[0] = jnp.sum(fired.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "act_bits", "act_frac_bits"))
 def delta_encode_pallas(
-    x: jax.Array, x_hat: jax.Array, theta: jax.Array, *, interpret: bool = True
+    x: jax.Array, x_hat: jax.Array, theta: jax.Array, *,
+    interpret: bool = True,
+    act_bits: Optional[int] = None, act_frac_bits: int = 8,
 ):
     """x, x_hat: [F] with F % (8*128) == 0 (callers pad; see ops.py).
 
     Returns (delta [F], new_x_hat [F], nnz_per_block [F/1024] int32).
+    With ``act_bits`` the threshold comparison runs on the Qm.n grid
+    (see ops.delta_encode); theta is snapped here, x inside the kernel.
     """
     f = x.shape[0]
     assert f % (BLOCK_ROWS * LANES) == 0, f"F={f} must be padded to 1024"
@@ -46,9 +63,13 @@ def delta_encode_pallas(
     x2 = x.reshape(rows, LANES)
     xh2 = x_hat.reshape(rows, LANES)
     theta_arr = jnp.asarray(theta, x.dtype).reshape(1)
+    if act_bits is not None:
+        from repro.core.quantization import quantize_act
+        theta_arr = quantize_act(theta_arr, act_bits, act_frac_bits)
 
     delta, new_xh, nnz = pl.pallas_call(
-        _delta_encode_kernel,
+        functools.partial(_delta_encode_kernel, act_bits=act_bits,
+                          act_frac_bits=act_frac_bits),
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((1,), lambda b: (0,)),                     # theta

@@ -36,18 +36,29 @@ def _pad_to(x: jax.Array, align: int) -> Tuple[jax.Array, int]:
     return x, f
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "act_bits", "act_frac_bits"))
 def delta_encode(
     x: jax.Array, x_hat: jax.Array, theta,
     *, use_pallas: bool = False, interpret: bool = True,
+    act_bits: int | None = None, act_frac_bits: int = 8,
 ):
     """Eqs. (4)-(5). x, x_hat: [F] any length (padded internally).
-    Returns (delta [F], new_x_hat [F], nnz scalar int32)."""
+    Returns (delta [F], new_x_hat [F], nnz scalar int32).
+
+    ``act_bits`` (static) quantizes the threshold comparison to the Qm.n
+    activation grid (Q8.8 by default): x and theta are snapped to the
+    grid and the reference state stores the quantized x, so temporal
+    sparsity is computed on the same values the fixed-point arithmetic
+    sees.  None (default) keeps the fp32 comparison bit-identical to
+    before."""
     if not use_pallas:
-        return _ref.delta_encode_ref(x, x_hat, theta)
+        return _ref.delta_encode_ref(x, x_hat, theta, act_bits, act_frac_bits)
     xp, f = _pad_to(x, PAD_ALIGN)
     xhp, _ = _pad_to(x_hat, PAD_ALIGN)
-    delta, new_xh, nnz = delta_encode_pallas(xp, xhp, theta, interpret=interpret)
+    delta, new_xh, nnz = delta_encode_pallas(
+        xp, xhp, theta, interpret=interpret,
+        act_bits=act_bits, act_frac_bits=act_frac_bits)
     return delta[:f], new_xh[:f], jnp.sum(nnz)
 
 
@@ -129,11 +140,21 @@ def stsp_spmv(
     s: int,
     use_pallas: bool = False,
     interpret: bool = True,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
-    """y [H] = sum_k ds_vals[k] * W_cbcsc[:, idx[k]]  (fp32)."""
+    """y [H] = sum_k ds_vals[k] * W_cbcsc[:, idx[k]]  (fp32).
+
+    ``scale`` dequantizes int8 payloads in the epilogue: the kernels cast
+    ``val`` to fp32 internally, so y*scale with a power-of-two per-tensor
+    scale is exactly the fp32 result on pre-scaled weights (the multiply
+    is exact and commutes with the adds)."""
     if not use_pallas:
-        return stsp_spmv_xla(val, lidx, idx, ds_vals, s)
-    return stsp_spmv_pallas(val, lidx, idx, ds_vals, s=s, interpret=interpret)
+        y = stsp_spmv_xla(val, lidx, idx, ds_vals, s)
+    else:
+        y = stsp_spmv_pallas(val, lidx, idx, ds_vals, s=s, interpret=interpret)
+    if scale is not None:
+        y = y * scale
+    return y
 
 
 # -- batched (slot-dimension) entry points ---------------------------------
@@ -147,15 +168,18 @@ def stsp_spmv(
 # bit-comparable to `SpartusEngine`.
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "act_bits", "act_frac_bits"))
 def delta_encode_batch(
     x: jax.Array, x_hat: jax.Array, theta,
     *, use_pallas: bool = False, interpret: bool = True,
+    act_bits: int | None = None, act_frac_bits: int = 8,
 ):
     """Batched eqs. (4)-(5).  x, x_hat: [B, F] -> (delta [B, F],
-    new_x_hat [B, F], nnz [B] int32)."""
+    new_x_hat [B, F], nnz [B] int32).  ``act_bits`` as in delta_encode."""
     fn = functools.partial(delta_encode, use_pallas=use_pallas,
-                           interpret=interpret)
+                           interpret=interpret, act_bits=act_bits,
+                           act_frac_bits=act_frac_bits)
     return jax.vmap(fn, in_axes=(0, 0, None))(x, x_hat, theta)
 
 
@@ -193,6 +217,7 @@ def stsp_spmv_batch(
     use_pallas: bool = False,
     interpret: bool = True,
     w_dense: jax.Array | None = None,
+    scale: jax.Array | None = None,
 ) -> jax.Array:
     """Batched STSP SpMxSpV: shared CBCSC weights, per-slot active lists.
     idx, ds_vals: [B, K] -> y [B, H].
@@ -205,15 +230,24 @@ def stsp_spmv_batch(
       * ``use_pallas`` — single batched Pallas scatter kernel over grid
         (B, K) (one pallas_call for the whole pool, not a vmap of B calls);
       * otherwise — vmap of the XLA scatter-add path.
+
+    ``scale`` dequantizes int8 payloads (CBCSC val or dense mirror) in the
+    epilogue — one fp32 multiply on the [B, H] result, exact for the
+    power-of-two per-tensor scales the pack emits, so weight memory stays
+    int8 at rest on every route.
     """
     if w_dense is not None:
-        return delta_spmv_dense_gather_batch(w_dense, idx, ds_vals)
-    if use_pallas:
-        return stsp_spmv_scatter_batch_pallas(val, lidx, idx, ds_vals, s=s,
-                                              interpret=interpret)
-    fn = functools.partial(stsp_spmv, s=s, use_pallas=False,
-                           interpret=interpret)
-    return jax.vmap(fn, in_axes=(None, None, 0, 0))(val, lidx, idx, ds_vals)
+        y = delta_spmv_dense_gather_batch(w_dense, idx, ds_vals)
+    elif use_pallas:
+        y = stsp_spmv_scatter_batch_pallas(val, lidx, idx, ds_vals, s=s,
+                                           interpret=interpret)
+    else:
+        fn = functools.partial(stsp_spmv, s=s, use_pallas=False,
+                               interpret=interpret)
+        y = jax.vmap(fn, in_axes=(None, None, 0, 0))(val, lidx, idx, ds_vals)
+    if scale is not None:
+        y = y * scale
+    return y
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -308,7 +342,8 @@ def delta_spmv_dense_gather(
                   op_budget={"dot": 1, "sort": 1})
 @functools.partial(jax.jit, static_argnames=("capacity",))
 def delta_spmv_dense_topk_batch(
-    wt: jax.Array, delta: jax.Array, capacity: int
+    wt: jax.Array, delta: jax.Array, capacity: int,
+    scale: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused capacity enforcement + dense-mirror SpMV: wt [Q, H]
     (pre-transposed mirror), delta [B, Q] -> (y [B, H], n_dropped [B]).
@@ -331,7 +366,11 @@ def delta_spmv_dense_topk_batch(
         the transpose of `w.T` out of the per-tick dot on CPU, which
         made the un-transposed GEMM ~3x slower.
 
-    ``capacity >= Q`` (nothing can ever drop) skips the cond too."""
+    ``capacity >= Q`` (nothing can ever drop) skips the cond too.
+
+    ``scale`` dequantizes an int8 mirror in the GEMM epilogue (y*scale,
+    exact for power-of-two per-tensor scales): the mirror stays int8 at
+    rest and is only widened inside the GEMM fusion."""
     b, q = delta.shape
     k = min(capacity, q)
     fired = delta != 0
@@ -356,6 +395,8 @@ def delta_spmv_dense_topk_batch(
         ds_dense = jax.lax.cond(
             jnp.any(n_dropped > 0), clip, lambda d: d, delta)
     y = ds_dense.astype(jnp.float32) @ wt.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale
     return y, n_dropped
 
 

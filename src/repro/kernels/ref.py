@@ -5,16 +5,30 @@ tolerance across the shape/dtype sweeps in tests/test_kernels.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import quantize_act
+
 
 def delta_encode_ref(
-    x: jax.Array, x_hat: jax.Array, theta: float
+    x: jax.Array, x_hat: jax.Array, theta: float,
+    act_bits: Optional[int] = None, act_frac_bits: int = 8,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Eqs. (4)-(5): (delta, new_x_hat, nnz). x, x_hat: [F]."""
+    """Eqs. (4)-(5): (delta, new_x_hat, nnz). x, x_hat: [F].
+
+    With ``act_bits`` set, the threshold comparison runs on the Qm.n
+    activation grid: x and theta are snapped to the grid first, and the
+    updated reference state stores the *quantized* x — so x_hat stays
+    on-grid by induction and every delta is an exact difference of grid
+    points (what the fixed-point DPE hardware compares).
+    """
+    if act_bits is not None:
+        x = quantize_act(x, act_bits, act_frac_bits)
+        theta = quantize_act(jnp.asarray(theta, x.dtype), act_bits,
+                             act_frac_bits)
     raw = x - x_hat
     fired = jnp.abs(raw) > theta
     delta = jnp.where(fired, raw, jnp.zeros_like(raw))
@@ -46,7 +60,8 @@ def stsp_spmv_ref(
     CBCSC: row r = lidx*M + pe.  The spec of the Spartus MAC arrays."""
     q, m, blen = val.shape
     v = val[idx]                                   # [K, M, BLEN]
-    li = lidx[idx]                                 # [K, M, BLEN]
+    li = lidx[idx].astype(jnp.int32)               # [K, M, BLEN] (lidx may
+    #                                                be int8-packed)
     onehot = li[..., None] == jnp.arange(s, dtype=li.dtype)   # [K,M,BLEN,S]
     contrib = jnp.einsum(
         "kmb,kmbs->ksm", v.astype(jnp.float32) * ds_vals[:, None, None],
@@ -71,6 +86,7 @@ def stsp_spmv_scatter_ref(
     q, m, blen = val.shape
     v = val[idx].astype(jnp.float32) * ds_vals[:, None, None].astype(jnp.float32)
     pe = jnp.arange(m, dtype=jnp.int32)[None, :, None]        # [1, M, 1]
-    rows = lidx[idx] * m + pe                                  # [K, M, BLEN]
+    # int32 row math: an int8-packed lidx would overflow at lidx*m
+    rows = lidx[idx].astype(jnp.int32) * m + pe                # [K, M, BLEN]
     return jnp.zeros((s * m,), jnp.float32).at[rows.reshape(-1)].add(
         v.reshape(-1))

@@ -7,6 +7,8 @@ session pool with --pool N, or the asyncio streaming front-end with
         --batch 4 --steps 32
     PYTHONPATH=src python -m repro.launch.serve --spartus --theta 0.2
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --requests 24
+    PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 --quant \
+        --requests 24        # int8 weights + Q8.8 activations end-to-end
     PYTHONPATH=src python -m repro.launch.serve --spartus --pool 8 \
         --chunk-frames 32    # chunked device tick loop (1 dispatch / 32 frames)
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
@@ -124,6 +126,7 @@ def serve_arch(args):
 def serve_spartus(args):
     import numpy as np
 
+    from repro.core.quantization import QuantConfig
     from repro.data.speech import SpeechConfig, SpeechDataset
     from repro.models import lstm_am
     from repro.serving import (
@@ -142,7 +145,10 @@ def serve_spartus(args):
     )
     print("[serve] training a small CBTD+DeltaLSTM AM first ...")
     pre, post, rcfg = pretrain_retrain(cfg, 2, 1, theta=args.theta)
-    ecfg = EngineConfig(theta=args.theta, gamma=args.gamma, m=8)
+    quant = QuantConfig() if args.quant else None
+    if quant is not None:
+        print("[serve] quantized serving: int8 weights, Q8.8 activations")
+    ecfg = EngineConfig(theta=args.theta, gamma=args.gamma, m=8, quant=quant)
     from repro.hwsim import spartus_model as hw
 
     if args.pool > 0:
@@ -466,6 +472,7 @@ def serve_spartus_async(args):
 
     Uses an untrained CBTD-pruned model (the protocol/latency demo does
     not need trained weights; run --pool mode for the trained pipeline)."""
+    from repro.core.quantization import QuantConfig
     from repro.data.speech import SpeechConfig, SpeechDataset
     from repro.models import lstm_am
     from repro.serving import AsyncSpartusServer, BatchedSpartusEngine, \
@@ -479,7 +486,9 @@ def serve_spartus_async(args):
         lstm_am.init_params(jax.random.key(0), cfg),
         gamma=args.gamma, m=8)
     engine = BatchedSpartusEngine(
-        params, cfg, EngineConfig(theta=args.theta, gamma=args.gamma, m=8))
+        params, cfg, EngineConfig(theta=args.theta, gamma=args.gamma, m=8,
+                                  quant=QuantConfig() if args.quant
+                                  else None))
     capacity = max(args.pool, 1)
     chunk = args.chunk_frames or 8
 
@@ -574,6 +583,10 @@ def main():
     ap.add_argument("--theta", type=float, default=0.2)
     ap.add_argument("--gamma", type=float, default=0.75)
     ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--quant", action="store_true",
+                    help="--spartus modes: serve with int8 CBCSC weight "
+                         "payloads and Q8.8 delta thresholds "
+                         "(docs/quantization.md)")
     ap.add_argument("--pool", type=int, default=0,
                     help="session-pool capacity (0 = batch-1 engine)")
     ap.add_argument("--requests", type=int, default=16,

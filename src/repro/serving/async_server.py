@@ -910,6 +910,7 @@ class AsyncSpartusServer:
             chunk_frames=self.chunk_frames,
             n_dispatches=self.pool.n_dispatches,
             host_overlap_frac=self.pool.mean_host_overlap_frac(),
+            bytes_per_slot=self.pool.bytes_per_slot(),
         )
 
 

@@ -56,7 +56,9 @@ from repro.analysis.contracts import hotpath_contract
 from repro.kernels import ops
 from repro.models.lstm_am import LSTMAMConfig
 from repro.serving import telemetry as tele
-from repro.serving.engine import EngineConfig, PackedLayer, PackedSpartusModel
+from repro.serving.engine import (
+    EngineConfig, PackedLayer, PackedSpartusModel, active_quant,
+)
 
 
 class BatchedLayerState(NamedTuple):
@@ -165,28 +167,43 @@ class BatchedSpartusEngine(PackedSpartusModel):
         cursor: jax.Array,
     ) -> Tuple[PoolState, jax.Array]:
         cfg = self.cfg
+        quant = active_quant(cfg)
+        act_kw = (
+            {"act_bits": quant.act_bits, "act_frac_bits": quant.act_frac_bits}
+            if quant is not None else {}
+        )
         n_slots = x.shape[0]
         new_layers = []
         nnz_layers, dropped_layers = [], []
         h = x
         for layer, st in zip(self.layers, state.layers):
+            wscale = layer.scale if quant is not None else None
+            val, lidx, mirror = layer.enc.val, layer.enc.lidx, layer.w_dense_t
+            if quant is not None:
+                # int8 at rest inside the compiled module: without the
+                # barrier XLA folds convert(s8 const) into a baked f32
+                # constant, restoring the fp32 footprint at rest.
+                if mirror is not None:
+                    mirror = jax.lax.optimization_barrier(mirror)
+                else:
+                    val, lidx = jax.lax.optimization_barrier((val, lidx))
             s = jnp.concatenate([h, st.h], axis=-1)           # [B, D+H]
             delta, s_hat, nnz = ops.delta_encode_batch(
-                s, st.s_hat, cfg.theta, use_pallas=cfg.use_pallas
+                s, st.s_hat, cfg.theta, use_pallas=cfg.use_pallas, **act_kw
             )
-            if layer.w_dense_t is not None:
+            if mirror is not None:
                 # dense-mirror route: capacity enforced in the dense
                 # domain (no NZI list, no scatter) — bit-identical to the
                 # select + dense-gather chain, measurably faster on CPU.
                 y, dropped = ops.delta_spmv_dense_topk_batch(
-                    layer.w_dense_t, delta, layer.capacity)
+                    mirror, delta, layer.capacity, scale=wscale)
             else:
                 idx, vals, dropped = ops.select_active_columns_batch(
                     delta, layer.capacity
                 )
                 y = ops.stsp_spmv_batch(
-                    layer.enc.val, layer.enc.lidx, idx, vals,
-                    s=layer.enc.s, use_pallas=cfg.use_pallas,
+                    val, lidx, idx, vals,
+                    s=layer.enc.s, use_pallas=cfg.use_pallas, scale=wscale,
                 )
             dm = st.dm + y.astype(st.dm.dtype)
             h_new, c_new = ops.lstm_pointwise_batch(

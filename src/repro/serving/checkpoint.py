@@ -91,9 +91,17 @@ class PoolCheckpoint:
 
 def engine_fingerprint(engine) -> Dict[str, Any]:
     """The engine identity a checkpoint is only valid against: layer
-    shapes and the sparsity parameters that change the computed numbers.
-    (Weight *values* are assumed managed by the model checkpoint path —
-    serving snapshots carry state, not parameters.)"""
+    shapes and the sparsity/quantization parameters that change the
+    computed numbers.  (Weight *values* are assumed managed by the model
+    checkpoint path — serving snapshots carry state, not parameters.)
+
+    The quantization entry keeps a quantized pool from restoring an fp32
+    pool's sessions (and vice versa): the recurrent state evolves on a
+    different numeric grid, so resuming across formats would silently
+    diverge rather than fail."""
+    from repro.serving.engine import active_quant
+
+    quant = active_quant(engine.cfg)
     return {
         "input_dim": int(engine.input_dim),
         "n_classes": int(engine.n_classes),
@@ -101,6 +109,9 @@ def engine_fingerprint(engine) -> Dict[str, Any]:
                    for l in engine.layers],
         "theta": float(engine.cfg.theta),
         "gamma": float(engine.cfg.gamma),
+        "quant": (None if quant is None else
+                  [int(quant.weight_bits), int(quant.act_bits),
+                   int(quant.act_frac_bits)]),
     }
 
 

@@ -35,6 +35,7 @@ from repro.core import (
     CBCSC, blen_for, cbcsc_decode, cbcsc_encode, int8_pack,
 )
 from repro.core.delta_lstm import stacked_weight_matrix
+from repro.core.quantization import QuantConfig
 from repro.kernels import ops
 from repro.models.lstm_am import LSTMAMConfig
 
@@ -66,6 +67,18 @@ class EngineConfig:
     # dense-gather mirror (ops.spmv_use_dense_gather); "scatter" forces the
     # CBCSC scatter path, "dense" forces the mirror.
     spmv_path: str = "auto"
+    # Quantized serving (docs/quantization.md): None keeps the fp32 path
+    # byte-identical to before; a QuantConfig with enabled=True stores the
+    # CBCSC payload and dense mirror as int8 at rest (dequantized in the
+    # SpMV epilogue) and runs the delta threshold on the Qm.n activation
+    # grid.  enabled=False behaves exactly like None.
+    quant: Optional[QuantConfig] = None
+
+
+def active_quant(cfg: EngineConfig) -> Optional[QuantConfig]:
+    """The engine's quantization config iff quantization is actually on."""
+    q = cfg.quant
+    return q if (q is not None and q.enabled) else None
 
 
 def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
@@ -102,6 +115,18 @@ def pack_lstm_layer(params: Dict[str, Any], cfg: EngineConfig) -> PackedLayer:
         w_dense_t = jnp.asarray(cbcsc_decode(enc, jnp.float32).T)
     else:
         w_dense_t = None
+    if active_quant(cfg) is not None:
+        # Int8 at rest: the fp32 payload above is already on the int8 grid
+        # (wq = q8 * scale with a pow2 per-tensor scale), so dividing back
+        # by the scale is exact and y*scale in the SpMV epilogue reproduces
+        # the fp32 path bit for bit.  Weight memory drops 4x per element.
+        # The local indices pack to the paper's 8-bit LIDX when they fit
+        # (S <= 128; the kernels widen to int32 before any row math).
+        lidx = enc.lidx.astype(jnp.int8) if s <= 128 else enc.lidx
+        enc = dataclasses.replace(
+            enc, val=jnp.round(enc.val / scale).astype(jnp.int8), lidx=lidx)
+        if w_dense_t is not None:
+            w_dense_t = jnp.round(w_dense_t / scale).astype(jnp.int8)
     capacity = max(int(n_cols * cfg.capacity_frac), 8)
     return PackedLayer(
         enc=enc, scale=scale, bias=params["b"],
@@ -126,21 +151,37 @@ def _step_layer(
     layer: PackedLayer, state: LayerState, x: jax.Array, cfg: EngineConfig
 ) -> Tuple[jax.Array, Dict[str, int]]:
     """One streaming step of one layer.  x: [D] -> h: [H]."""
+    quant = active_quant(cfg)
+    act_kw = (
+        {"act_bits": quant.act_bits, "act_frac_bits": quant.act_frac_bits}
+        if quant is not None else {}
+    )
+    wscale = layer.scale if quant is not None else None
+    val, lidx, mirror = layer.enc.val, layer.enc.lidx, layer.w_dense_t
+    if quant is not None:
+        # int8 at rest INSIDE the compiled module too: the weights are
+        # closed-over constants, and without a barrier XLA folds
+        # convert(s8 const) into a baked f32 constant — silently
+        # restoring the fp32 footprint the quant mode exists to shed.
+        if mirror is not None:
+            mirror = jax.lax.optimization_barrier(mirror)
+        else:
+            val, lidx = jax.lax.optimization_barrier((val, lidx))
     s = jnp.concatenate([x, state.h])
     delta, s_hat, nnz = ops.delta_encode(
-        s, state.s_hat, cfg.theta, use_pallas=cfg.use_pallas
+        s, state.s_hat, cfg.theta, use_pallas=cfg.use_pallas, **act_kw
     )
-    if layer.w_dense_t is not None:
+    if mirror is not None:
         # B=1 leg of the exact batched dense-mirror computation, so pooled
         # and batch-1 logits stay bit-comparable on the dense path:
         y, dropped = ops.delta_spmv_dense_topk_batch(
-            layer.w_dense_t, delta[None], layer.capacity)
+            mirror, delta[None], layer.capacity, scale=wscale)
         y, dropped = y[0], dropped[0]
     else:
         idx, vals, dropped = ops.select_active_columns(delta, layer.capacity)
         y = ops.stsp_spmv(
-            layer.enc.val, layer.enc.lidx, idx, vals, s=layer.enc.s,
-            use_pallas=cfg.use_pallas,
+            val, lidx, idx, vals, s=layer.enc.s,
+            use_pallas=cfg.use_pallas, scale=wscale,
         )
     dm = state.dm + y.astype(state.dm.dtype)
     h_new, c_new = ops.lstm_pointwise(
@@ -194,6 +235,42 @@ class PackedSpartusModel:
         (0 for a properly CBTD-pruned model; > 0 flags that the exported
         weights deviate from the training-time matrix)."""
         return sum(l.pack_overflow for l in self.layers)
+
+    def weight_bytes(self) -> int:
+        """Bytes of packed weight memory at rest: CBCSC payloads (val +
+        lidx + valid), dense mirrors, biases, and the fc/logit head.  This
+        is the model's share of a pool's device footprint — with
+        ``cfg.quant`` enabled the val/mirror terms are int8 (4x smaller),
+        while the int32 lidx bookkeeping and the fp32 head are unchanged
+        (docs/quantization.md has the per-term table)."""
+        def nbytes(a) -> int:
+            return int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+
+        total = 0
+        for l in self.layers:
+            total += nbytes(l.enc.val) + nbytes(l.enc.lidx)
+            total += nbytes(l.enc.valid) + nbytes(l.bias)
+            total += nbytes(l.scale)
+            if l.w_dense_t is not None:
+                total += nbytes(l.w_dense_t)
+        for p in (self.fcl, self.logit):
+            total += sum(nbytes(a) for a in p.values())
+        return total
+
+    def weight_payload_bytes(self) -> int:
+        """CBCSC val/lidx streams + dense mirrors only — the weight memory
+        the paper's WMEM actually stores per layer (excludes the validity
+        mask, biases and the fp32 fc/logit head, which are O(H) or
+        amortised).  The ~4x int8 reduction applies to this term."""
+        def nbytes(a) -> int:
+            return int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+
+        total = 0
+        for l in self.layers:
+            total += nbytes(l.enc.val) + nbytes(l.enc.lidx)
+            if l.w_dense_t is not None:
+                total += nbytes(l.w_dense_t)
+        return total
 
 
 class SpartusEngine(PackedSpartusModel):

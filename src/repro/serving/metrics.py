@@ -458,6 +458,7 @@ class PoolObservability:
         ``spartus_connected_clients``     async streams open
         ``spartus_host_overlap_frac``     last chunk's overlap fraction
         ``spartus_temporal_sparsity``     incremental, last window
+        ``spartus_slot_bytes``            device bytes per resident session
     histograms
         ``spartus_dispatch_seconds``      dispatch call wall time
         ``spartus_chunk_seconds``         full boundary wall time
@@ -504,6 +505,10 @@ class PoolObservability:
         self.g_sparsity = r.gauge(
             "spartus_temporal_sparsity",
             "incremental temporal sparsity of the last folded window")
+        self.g_slot_bytes = r.gauge(
+            "spartus_slot_bytes",
+            "device bytes per resident session (state + buffers + the "
+            "slot's share of the packed weights)")
         self.h_dispatch = r.histogram(
             "spartus_dispatch_seconds", "dispatch call wall time")
         self.h_chunk = r.histogram(
@@ -562,6 +567,11 @@ class PoolObservability:
     def fold_cancelled(self, n: int) -> None:
         if n:
             self.c_cancelled.inc(n)
+
+    def fold_slot_bytes(self, per_slot: float) -> None:
+        """Record the pool's per-slot device footprint (host shape
+        arithmetic from ``SessionPool.bytes_per_slot`` — no device sync)."""
+        self.g_slot_bytes.set(float(per_slot))
 
     # -- robustness-layer hooks (serving/faults.py, serving/checkpoint.py,
     #    the async watchdog / reaper / shed paths) --------------------------

@@ -325,6 +325,11 @@ class ServeStats:
     p50_ttfl_s: float = 0.0
     p95_ttfl_s: float = 0.0
     p99_ttfl_s: float = 0.0
+    # device bytes per resident session (SessionPool.bytes_per_slot):
+    # per-slot state slabs + frame/logits rows + the slot's share of the
+    # shared packed weights — the capacity currency the int8 quantized
+    # pack (EngineConfig.quant) buys back:
+    bytes_per_slot: float = 0.0
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -342,6 +347,7 @@ def aggregate_stats(
     chunk_frames: int = 0,
     n_dispatches: int = 0,
     host_overlap_frac: float = 0.0,
+    bytes_per_slot: float = 0.0,
 ) -> ServeStats:
     """Reduce per-request results to the aggregate `ServeStats` (shared by
     the synchronous `serve_requests` driver and the asyncio front-end)."""
@@ -376,6 +382,7 @@ def aggregate_stats(
         p50_ttfl_s=pt["p50_ttfl_s"],
         p95_ttfl_s=pt["p95_ttfl_s"],
         p99_ttfl_s=pt["p99_ttfl_s"],
+        bytes_per_slot=bytes_per_slot,
     )
 
 
@@ -1252,6 +1259,28 @@ class SessionPool:
         with self._state_lock:
             return self.engine.measured_sparsity(self.state)
 
+    def bytes_per_slot(self) -> float:
+        """Device bytes held per resident session: the slot's share of the
+        recurrent-state slabs (incl. telemetry and cursors), its frame
+        buffer row, its logits-bank row, and the per-slot share of the
+        shared packed weights (``engine.weight_bytes() / capacity``).
+        Pure shape arithmetic — no device sync.  Quantized packing
+        (``EngineConfig.quant``) shrinks the weight term ~4x; the fp32
+        session state is format-independent.  Folds the
+        ``spartus_slot_bytes`` gauge when observability is attached."""
+        def nbytes(a) -> int:
+            return int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+
+        total = sum(nbytes(l) for l in jax.tree_util.tree_leaves(self.state))
+        total += nbytes(self._frames) + nbytes(self._lengths)
+        if self._out is not None:
+            total += nbytes(self._out)
+        total += self.engine.weight_bytes()
+        per_slot = total / self.capacity
+        if self.obs is not None:
+            self.obs.fold_slot_bytes(per_slot)
+        return float(per_slot)
+
     # -- checkpoint / restore (serving/checkpoint.py) ------------------------
 
     def pool_config(self) -> Dict[str, object]:
@@ -1426,5 +1455,6 @@ def serve_requests(
         chunk_frames=chunk_frames,
         n_dispatches=pool.n_dispatches,
         host_overlap_frac=pool.mean_host_overlap_frac(),
+        bytes_per_slot=pool.bytes_per_slot(),
     )
     return results, stats

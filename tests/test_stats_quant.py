@@ -18,6 +18,13 @@ from repro.core import (
     temporal_sparsity,
     weight_sparsity,
 )
+from repro.core.quantization import pow2_scale_for
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs the test extras; a bare local
+    HAVE_HYPOTHESIS = False  # env still runs the deterministic versions
 
 
 def test_op_saving_matches_table2():
@@ -109,3 +116,124 @@ def test_int8_pack_roundtrip():
     assert q.dtype == jnp.int8
     w2 = int8_unpack(q, scale)
     assert float(jnp.max(jnp.abs(w - w2))) <= float(scale) / 2 + 1e-9
+
+
+# -- quantization invariants (docs/quantization.md) --------------------------
+#
+# Each property has a deterministic version that always runs (a bare env
+# without hypothesis still pins the invariant on hand-picked adversarial
+# inputs) and, when hypothesis is available, a generative version that
+# searches the input space.
+
+Q88_MAX = (2.0 ** 15 - 1) / 256            # largest Q8.8 value
+Q88_MIN = -(2.0 ** 15) / 256               # two's-complement endpoint
+
+
+def check_pow2_scale_covers(w: np.ndarray, bits: int = 8) -> None:
+    scale = float(pow2_scale_for(jnp.asarray(w), bits))
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = float(np.max(np.abs(w)))
+    # coverage: every |w| fits in the signed grid at this scale ...
+    assert amax <= scale * qmax * (1 + 1e-5)
+    # ... minimality: the next-smaller pow2 scale would not cover
+    # (unless the tensor is below the 1e-8 degenerate-zero floor)
+    if amax > 1e-6:
+        assert scale * qmax < amax * 2 * (1 + 1e-5)
+    # ... and the scale is an exact power of two (the FPGA shift)
+    assert scale == 2.0 ** round(np.log2(scale))
+
+
+def check_quantize_idempotent(w: np.ndarray, bits: int = 8) -> None:
+    q1 = np.asarray(quantize(jnp.asarray(w), bits))
+    q2 = np.asarray(quantize(jnp.asarray(q1), bits))
+    np.testing.assert_array_equal(q1, q2)
+
+
+def check_act_saturates(x: np.ndarray) -> None:
+    q = np.asarray(quantize_act(jnp.asarray(x), bits=16, frac_bits=8))
+    # saturation, never wrap-around: outputs stay inside the Q8.8 range
+    # and keep the input's sign even for float32-max magnitudes
+    assert np.all(q <= Q88_MAX) and np.all(q >= Q88_MIN)
+    np.testing.assert_array_equal(np.sign(q[np.abs(x) >= 1.0]),
+                                  np.sign(x[np.abs(x) >= 1.0]))
+    np.testing.assert_array_equal(q[x >= Q88_MAX], Q88_MAX)
+    np.testing.assert_array_equal(q[x <= Q88_MIN], Q88_MIN)
+
+
+def test_pow2_scale_covers_deterministic():
+    for w in ([1.0], [-1.0], [0.0], [127.0], [128.0], [0.9, -1.7e3],
+              [1e-30], [3.0e38], [0.26, -0.5, 64.1]):
+        check_pow2_scale_covers(np.asarray(w, np.float32))
+
+
+def test_quantize_idempotent_deterministic():
+    for w in ([0.3, -0.7, 0.111], [1e-4, -256.0], [0.0],
+              [3.0e38, -1.0]):
+        check_quantize_idempotent(np.asarray(w, np.float32))
+
+
+def test_quantize_roundtrips_grid_points():
+    # tensors already on an int8 grid are fixed points of quantize
+    rng = np.random.default_rng(0)
+    for e in (-8, -3, 0, 5):
+        codes = rng.integers(-127, 128, size=32)
+        w = (codes * 2.0 ** e).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(quantize(jnp.asarray(w), 8)),
+                                      w)
+
+
+def test_fake_quant_ste_gradient_identity():
+    # STE backward is exactly identity: d/dw sum(fake_quant_ste(w)) = 1
+    w = jnp.array([0.3, -0.7, 0.111, 100.0, -1e-4])
+    g = jax.grad(lambda w: jnp.sum(fake_quant_ste(w, 8)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(5, np.float32))
+
+
+def test_act_quant_saturates_deterministic():
+    check_act_saturates(np.asarray(
+        [1e38, -1e38, 3.4e38, -3.4e38, np.inf, -np.inf,
+         65e3, -65e3, 127.996, -128.0, 1.0, -1.0], np.float32))
+
+
+def test_quantize_sign_flip_equivariance():
+    # regression: the clip used to admit the -qmax-1 two's-complement
+    # code, so a caller-supplied undersized scale made quantize(-w)
+    # differ from -quantize(w) on the negative saturation side
+    w = jnp.array([-0.502, -1.0, 0.25, 0.9])
+    scale = jnp.asarray(1.0 / 256)          # undersized: |w|/scale > 127
+    np.testing.assert_array_equal(
+        np.asarray(quantize(-w, 8, scale)), -np.asarray(quantize(w, 8, scale)))
+    np.testing.assert_array_equal(
+        np.asarray(quantize(-w, 8)), -np.asarray(quantize(w, 8)))
+
+
+if HAVE_HYPOTHESIS:
+    finite_arrays = st.lists(
+        st.floats(min_value=-3.0e38, max_value=3.0e38, allow_nan=False,
+                  width=32),
+        min_size=1, max_size=16,
+    ).map(lambda xs: np.asarray(xs, np.float32))
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite_arrays)
+    def test_pow2_scale_covers_hypothesis(w):
+        check_pow2_scale_covers(w)
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite_arrays)
+    def test_quantize_idempotent_hypothesis(w):
+        check_quantize_idempotent(w)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.floats(allow_nan=False, width=32),
+                    min_size=1, max_size=16)
+           .map(lambda xs: np.asarray(xs, np.float32)))
+    def test_act_quant_saturates_hypothesis(x):
+        check_act_saturates(x)
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite_arrays)
+    def test_quantize_sign_flip_hypothesis(w):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(jnp.asarray(-w), 8)),
+            -np.asarray(quantize(jnp.asarray(w), 8)))
