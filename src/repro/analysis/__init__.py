@@ -10,8 +10,14 @@ Two layers (see docs/contracts.md):
 * ``lint`` — repo-specific AST rules encoding bugs already paid for
   (iota-gather, eager-scatter, aliased-donation, blocking-in-driver,
   wallclock-in-jit).
+* ``concurrency``/``lockorder`` — the concurrency analyzer
+  (docs/concurrency.md): a static guarded-by/lockset pass over the
+  ``_guarded_by_`` class tables plus the await-under-lock rule, and a
+  runtime lock-order recorder (acquisition-graph cycle = potential
+  deadlock, per-lock hold times) the chaos job and the stress tests
+  install via ``lockorder.install``.
 
-CLI: ``python -m tools.lint --contracts --ast``.
+CLI: ``python -m tools.lint --contracts --ast --concurrency``.
 """
 from .contracts import (  # noqa: F401
     ContractReport,
@@ -32,6 +38,16 @@ from .lint import (  # noqa: F401
     lint_repo,
     lint_source,
 )
+from .concurrency import (  # noqa: F401
+    CONCURRENCY_RULE_NAMES,
+    check_repo as check_concurrency_repo,
+    check_source as check_concurrency_source,
+)
+from .lockorder import (  # noqa: F401
+    InstrumentedLock,
+    LockOrderRecorder,
+    make_lock,
+)
 from . import hlo  # noqa: F401
 
 __all__ = [
@@ -50,5 +66,11 @@ __all__ = [
     "RULE_NAMES",
     "lint_repo",
     "lint_source",
+    "CONCURRENCY_RULE_NAMES",
+    "check_concurrency_repo",
+    "check_concurrency_source",
+    "InstrumentedLock",
+    "LockOrderRecorder",
+    "make_lock",
     "hlo",
 ]

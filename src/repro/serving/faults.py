@@ -221,6 +221,10 @@ class FaultInjector:
     thread).  Each event fires exactly once; ``fired`` records the events
     that actually triggered, in order, for post-hoc assertions."""
 
+    # machine-checked lock discipline (repro.analysis.concurrency):
+    _guarded_by_ = {"_counts": "_lock", "_pending": "_lock",
+                    "fired": "_lock"}
+
     def __init__(self, plan: FaultPlan) -> None:
         self.plan = plan
         self._lock = threading.Lock()

@@ -65,6 +65,18 @@ DEFAULT_TIME_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1,
                         1.0, 3.0)
 
 
+def _make_lock(name: str) -> threading.Lock:
+    """Lock factory: a plain ``threading.Lock`` normally, an instrumented
+    lock feeding the acquisition-order recorder when one is installed
+    (``repro.analysis.lockorder`` — imported lazily, at first registry /
+    ring construction, so merely importing this module stays light)."""
+    try:
+        from repro.analysis import lockorder
+    except ImportError:          # analysis layer absent: never block serving
+        return threading.Lock()
+    return lockorder.make_lock(name)
+
+
 def _fmt_labels(labels: Tuple[Tuple[str, str], ...]) -> str:
     if not labels:
         return ""
@@ -74,6 +86,8 @@ def _fmt_labels(labels: Tuple[Tuple[str, str], ...]) -> str:
 
 class Counter:
     """Monotonically increasing counter (float, exact to 2^53)."""
+
+    _guarded_by_ = {"_value": "_lock"}
 
     def __init__(self, name: str, help: str, lock: threading.Lock,
                  labels: Tuple[Tuple[str, str], ...] = ()):
@@ -91,11 +105,14 @@ class Counter:
 
     @property
     def value(self) -> float:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Gauge:
     """A value that goes up and down (occupancy, queue depth, ...)."""
+
+    _guarded_by_ = {"_value": "_lock"}
 
     def __init__(self, name: str, help: str, lock: threading.Lock,
                  labels: Tuple[Tuple[str, str], ...] = ()):
@@ -115,13 +132,16 @@ class Gauge:
 
     @property
     def value(self) -> float:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Histogram:
     """Fixed-bucket histogram (cumulative-bucket exposition, Prometheus
     convention: ``bucket[i]`` counts observations <= ``buckets[i]``, plus
     an implicit +Inf bucket)."""
+
+    _guarded_by_ = {"_counts": "_lock", "_sum": "_lock", "_count": "_lock"}
 
     def __init__(self, name: str, help: str, lock: threading.Lock,
                  buckets: Sequence[float] = DEFAULT_TIME_BUCKETS,
@@ -148,11 +168,13 @@ class Histogram:
 
     @property
     def count(self) -> int:
-        return self._count
+        with self._lock:
+            return self._count
 
     @property
     def sum(self) -> float:
-        return self._sum
+        with self._lock:
+            return self._sum
 
     def cumulative(self) -> List[Tuple[float, int]]:
         """[(le, cumulative_count)] including the +Inf bucket."""
@@ -186,8 +208,13 @@ class MetricsRegistry:
     driver and the admin endpoint.
     """
 
+    _guarded_by_ = {"_metrics": "_lock"}
+
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        # one shared lock for the registry map AND every metric it
+        # creates (passed into each constructor), made through the
+        # lock-order factory so the chaos recorder sees it:
+        self._lock = _make_lock("MetricsRegistry._lock")
         self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], Any] = {}
 
     def _get(self, cls, name: str, help: str,
@@ -279,24 +306,31 @@ class TimeSeries:
     history.  ``snapshot(last=N)`` returns copies, safe to serialize
     while the driver keeps appending."""
 
+    _guarded_by_ = {"_samples": "_lock", "_n_appended": "_lock"}
+
     def __init__(self, maxlen: int = DEFAULT_TIMESERIES_LEN):
         if maxlen < 1:
             raise ValueError("TimeSeries maxlen must be >= 1")
         self.maxlen = maxlen
-        self._lock = threading.Lock()
+        self._lock = _make_lock("TimeSeries._lock")
         self._samples: deque = deque(maxlen=maxlen)
         self._n_appended = 0    # total ever appended (detects drops)
 
     def __len__(self) -> int:
-        return len(self._samples)
+        with self._lock:
+            return len(self._samples)
 
     @property
     def n_appended(self) -> int:
-        return self._n_appended
+        with self._lock:
+            return self._n_appended
 
     @property
     def n_dropped(self) -> int:
-        return self._n_appended - len(self._samples)
+        # one acquisition: reading the pair separately can tear (an
+        # append between the reads yields a phantom drop count).
+        with self._lock:
+            return self._n_appended - len(self._samples)
 
     def append(self, sample: Dict[str, Any]) -> None:
         with self._lock:
@@ -362,9 +396,15 @@ class Tracer:
     span: the instrumentation sites cost one attribute check.
     """
 
+    _guarded_by_ = {"_events": "_lock"}
+
     def __init__(self, enabled: bool = True, max_events: int = 1_000_000):
         self.enabled = enabled
-        self._lock = threading.Lock()
+        # a disabled tracer (incl. the module-level NULL_TRACER) keeps a
+        # plain lock so importing this module never touches the analysis
+        # layer; enabled tracers go through the recorder factory.
+        self._lock = (_make_lock("Tracer._lock") if enabled
+                      else threading.Lock())
         self._events: deque = deque(maxlen=max_events)
         self._epoch = time.perf_counter()
 
@@ -397,7 +437,8 @@ class Tracer:
 
     @property
     def n_events(self) -> int:
-        return len(self._events)
+        with self._lock:
+            return len(self._events)
 
     def phase_names(self) -> List[str]:
         with self._lock:

@@ -65,7 +65,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import threading
 import time
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
@@ -74,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import lockorder
 from repro.serving.batched_engine import BatchedSpartusEngine, PoolState
 from repro.serving.faults import FaultInjector
 from repro.serving.metrics import NULL_TRACER, PoolObservability
@@ -440,6 +440,23 @@ class SessionPool:
     API is unchanged — only placement differs.
     """
 
+    # Machine-checked lock discipline (repro.analysis.concurrency; see
+    # docs/concurrency.md).  Every listed field is rebound at dispatch
+    # boundaries by jitted calls that DONATE the old buffers, while
+    # cross-thread readers — the async server's ``stats()``, the admin
+    # endpoint, checkpoint snapshots — may hold stale references; an
+    # unlocked read can fetch a deleted buffer.  Host bookkeeping
+    # (``_slots``, ``_by_req``, ``_staged``, ``_staged_appends``,
+    # ``_partials``) is tick/driver-thread-only and deliberately absent.
+    _guarded_by_ = {
+        "state": "_state_lock",
+        "_frames": "_state_lock",
+        "_lengths": "_state_lock",
+        "_out": "_state_lock",
+        "_pending": "_state_lock",
+        "_pending_partials": "_state_lock",
+    }
+
     def __init__(self, engine: BatchedSpartusEngine, capacity: int,
                  max_frames: int = 64, chunk_frames: int = 0,
                  max_buffer_frames: Optional[int] = None,
@@ -531,7 +548,10 @@ class SessionPool:
         # holding a stale reference would fetch a deleted buffer; making
         # (dispatch + rebind) atomic and reading under the same lock means
         # readers only ever see the live (possibly in-flight) state.
-        self._state_lock = threading.Lock()
+        # Created through the lock-order factory so the chaos job's
+        # recorder (repro.analysis.lockorder) sees every acquisition; a
+        # plain threading.Lock when no recorder is installed.
+        self._state_lock = lockorder.make_lock("SessionPool._state_lock")
 
     def _fire(self, site: str) -> None:
         """Fault-injection hook: raise if the plan scheduled a failure at
@@ -597,8 +617,9 @@ class SessionPool:
         """Chunked mode: retired sessions (or streamed chunks) whose host
         fetch is still outstanding (resolved by the next ``step_chunk``,
         ``tick`` or ``flush``)."""
-        return bool(self._pending or self._pending_partials
-                    or self._partials)
+        with self._state_lock:
+            return bool(self._pending or self._pending_partials
+                        or self._partials)
 
     @property
     def has_retirable(self) -> bool:
@@ -753,7 +774,9 @@ class SessionPool:
                 self.obs.fold_cancelled(1)
             sess.cancelled = True
             return
-        for p in self._pending:
+        with self._state_lock:
+            pending = list(self._pending)
+        for p in pending:
             for sess in p.sessions:
                 if sess.req_id == req_id:
                     if not sess.cancelled and self.obs is not None:
@@ -804,7 +827,11 @@ class SessionPool:
         hi = sess.cursor
         if t0 >= hi:
             return np.zeros((0, self.engine.n_classes), np.float32)
-        return np.asarray(self._out[self._by_req[req_id], t0:hi])
+        # Same discipline as ``measured_sparsity``: the lock keeps an
+        # offloaded tick from donating ``self._out`` away mid-fetch (the
+        # PR 6 deleted-buffer race, this time on the logits bank).
+        with self._state_lock:
+            return np.asarray(self._out[self._by_req[req_id], t0:hi])
 
     def _reap_cancelled(self) -> None:
         """Free cancelled sessions' slots and drop their staged uploads
@@ -878,37 +905,46 @@ class SessionPool:
         t_need = max(
             [f.shape[0] for _, f in self._staged] +
             [start + a_pad for _, start, _ in appends] + [0])
-        if t_need > self._t_buf:
-            self._grow_buffers(t_need)
-        if self._staged:
-            rb = _frame_bucket(len(self._staged), floor=1)
-            rows = np.zeros((rb, self._t_buf, self.engine.input_dim),
-                            np.float32)
-            slots = np.full((rb,), self.capacity, np.int32)  # OOB pad: drop
-            ts = np.zeros((rb,), np.int32)
-            for i, (k, feats) in enumerate(self._staged):
-                rows[i, :feats.shape[0]] = feats  # zero tail clears stale
-                slots[i] = k
-                ts[i] = feats.shape[0]
-            self._staged.clear()
-            self._frames, self._lengths = _device_upload(
-                self._frames, self._lengths, jax.device_put(rows), slots, ts)
-        if appends:
-            rb = _frame_bucket(len(appends), floor=1)
-            rows = np.zeros((rb, a_pad, self.engine.input_dim), np.float32)
-            slots = np.full((rb,), self.capacity, np.int32)
-            starts = np.zeros((rb,), np.int32)
-            ts = np.zeros((rb,), np.int32)
-            for i, (k, start, feats) in enumerate(appends):
-                rows[i, :feats.shape[0]] = feats
-                slots[i] = k
-                starts[i] = start
-                ts[i] = start + feats.shape[0]
-            self._staged_appends.clear()
-            self._frames, self._lengths = _device_append(
-                self._frames, self._lengths, jax.device_put(rows), slots,
-                starts, ts)
-        self._ensure_slot_sharding()
+        # The upload scatters DONATE ``self._frames``/``self._lengths``
+        # (and a growth rebinds them): the same deleted-buffer hazard as
+        # the step dispatch, against a concurrent checkpoint snapshot or
+        # admin scrape holding a stale reference — so the whole
+        # rebind sequence holds the state lock (the guarded-by checker
+        # enforces this; the staged host lists stay driver-thread-only).
+        with self._state_lock:
+            if t_need > self._t_buf:
+                self._grow_buffers(t_need)
+            if self._staged:
+                rb = _frame_bucket(len(self._staged), floor=1)
+                rows = np.zeros((rb, self._t_buf, self.engine.input_dim),
+                                np.float32)
+                slots = np.full((rb,), self.capacity, np.int32)  # OOB: drop
+                ts = np.zeros((rb,), np.int32)
+                for i, (k, feats) in enumerate(self._staged):
+                    rows[i, :feats.shape[0]] = feats  # zero tail clears stale
+                    slots[i] = k
+                    ts[i] = feats.shape[0]
+                self._staged.clear()
+                self._frames, self._lengths = _device_upload(
+                    self._frames, self._lengths, jax.device_put(rows),
+                    slots, ts)
+            if appends:
+                rb = _frame_bucket(len(appends), floor=1)
+                rows = np.zeros((rb, a_pad, self.engine.input_dim),
+                                np.float32)
+                slots = np.full((rb,), self.capacity, np.int32)
+                starts = np.zeros((rb,), np.int32)
+                ts = np.zeros((rb,), np.int32)
+                for i, (k, start, feats) in enumerate(appends):
+                    rows[i, :feats.shape[0]] = feats
+                    slots[i] = k
+                    starts[i] = start
+                    ts[i] = start + feats.shape[0]
+                self._staged_appends.clear()
+                self._frames, self._lengths = _device_append(
+                    self._frames, self._lengths, jax.device_put(rows), slots,
+                    starts, ts)
+            self._ensure_slot_sharding()
 
     def _masks(self) -> Tuple[np.ndarray, np.ndarray]:
         """active = occupied AND has unconsumed frames (a starved streaming
@@ -1062,27 +1098,32 @@ class SessionPool:
                 self._free(k)
         newly: List[_PendingChunk] = []
         newly_partials: List[_PendingPartials] = []
-        if retiring:
-            # snapshot the output buffer NOW, in one device op: it is
-            # dispatched against this chunk's output before the next
-            # step_chunk donates it, detaching the rows device-side; the
-            # one-copy host fetch waits one more chunk.
-            newly.append(_PendingChunk(
-                sessions=retiring, slots=slots,
-                rows=self.engine.snapshot_out(self._out)))
-        if partial_entries:
-            # likewise for the streamed chunk rows — but only this chunk's
-            # [B, n, n_classes] window, not the whole buffer:
-            newly_partials.append(_PendingPartials(
-                entries=partial_entries,
-                rows=self.engine.snapshot_chunk(self._out,
-                                                self._dev1d(starts),
-                                                n_frames=n)))
+        if retiring or partial_entries:
+            with self._state_lock:
+                if retiring:
+                    # snapshot the output buffer NOW, in one device op: it
+                    # is dispatched against this chunk's output before the
+                    # next step_chunk donates it, detaching the rows
+                    # device-side; the one-copy host fetch waits one more
+                    # chunk.
+                    newly.append(_PendingChunk(
+                        sessions=retiring, slots=slots,
+                        rows=self.engine.snapshot_out(self._out)))
+                if partial_entries:
+                    # likewise for the streamed chunk rows — but only this
+                    # chunk's [B, n, n_classes] window, not the whole
+                    # buffer:
+                    newly_partials.append(_PendingPartials(
+                        entries=partial_entries,
+                        rows=self.engine.snapshot_chunk(self._out,
+                                                        self._dev1d(starts),
+                                                        n_frames=n)))
         with self._tracer.span("snapshot_fetch"):
             finished = self._resolve()       # syncs on the PREVIOUS chunk
         t_end = time.perf_counter()
-        self._pending.extend(newly)
-        self._pending_partials.extend(newly_partials)
+        with self._state_lock:
+            self._pending.extend(newly)
+            self._pending_partials.extend(newly_partials)
 
         wall = t_end - t0
         overlap = 0.0
@@ -1113,9 +1154,10 @@ class SessionPool:
                 slots.append(k)
                 self._free(k)
         if retiring:
-            self._pending.append(_PendingChunk(
-                sessions=retiring, slots=slots,
-                rows=self.engine.snapshot_out(self._out)))
+            with self._state_lock:
+                self._pending.append(_PendingChunk(
+                    sessions=retiring, slots=slots,
+                    rows=self.engine.snapshot_out(self._out)))
 
     def flush(self) -> List[RequestResult]:
         """Resolve retirements (and streamed partials) still pending from
@@ -1166,9 +1208,10 @@ class SessionPool:
         return self._resolve_pending()
 
     def _resolve_partials(self) -> None:
-        if not self._pending_partials:
+        with self._state_lock:
+            pend, self._pending_partials = self._pending_partials, []
+        if not pend:
             return
-        pend, self._pending_partials = self._pending_partials, []
         for p in pend:
             rows = np.asarray(p.rows)          # ONE fetch per chunk
             for sess, k, t0, adv in p.entries:
@@ -1180,9 +1223,10 @@ class SessionPool:
                     req_id=sess.req_id, t0=t0, rows=rows[k, :adv].copy()))
 
     def _resolve_pending(self) -> List[RequestResult]:
-        if not self._pending:
+        with self._state_lock:
+            pend, self._pending = self._pending, []
+        if not pend:
             return []
-        pend, self._pending = self._pending, []
         out: List[RequestResult] = []
         for p in pend:
             rows = np.asarray(p.rows)          # ONE fetch for all retirees
@@ -1202,6 +1246,10 @@ class SessionPool:
         host values only, plus the (device, un-fetched) telemetry-totals
         dispatch that the NEXT boundary's fold will diff."""
         adm, self._adm_since_fold = self._adm_since_fold, 0
+        # the totals reduction reads ``self.state``: take the lock so an
+        # interleaved reader/dispatch cannot hand it a deleted buffer.
+        with self._state_lock:
+            totals = self.engine.telemetry_totals(self.state)
         self.obs.fold_chunk(
             occupancy=self.n_active,
             capacity=self.capacity,
@@ -1213,7 +1261,7 @@ class SessionPool:
             admissions=adm,
             retirements=retirements,
             shard_loads=self.shard_loads(),
-            telemetry_totals=self.engine.telemetry_totals(self.state),
+            telemetry_totals=totals,
         )
 
     def mean_host_overlap_frac(self) -> float:
@@ -1234,19 +1282,20 @@ class SessionPool:
         self._reap_cancelled()
         out: List[RequestResult] = self._resolve()
         drained: List[RequestResult] = []
-        for k, sess in enumerate(self._slots):
-            if sess is None:
-                continue
-            if self.chunk_frames:
-                logits = (np.asarray(self._out[k, :sess.cursor])
-                          if sess.cursor
-                          else np.zeros((0, n_classes), np.float32))
-            else:
-                logits = (np.stack(sess.rows) if sess.rows
-                          else np.zeros((0, n_classes), np.float32))
-            drained.append(sess.result(logits, truncated=not sess.done,
-                                       finish_step=now))
-            self._free(k)
+        with self._state_lock:
+            for k, sess in enumerate(self._slots):
+                if sess is None:
+                    continue
+                if self.chunk_frames:
+                    logits = (np.asarray(self._out[k, :sess.cursor])
+                              if sess.cursor
+                              else np.zeros((0, n_classes), np.float32))
+                else:
+                    logits = (np.stack(sess.rows) if sess.rows
+                              else np.zeros((0, n_classes), np.float32))
+                drained.append(sess.result(logits, truncated=not sess.done,
+                                           finish_step=now))
+                self._free(k)
         if self.obs is not None:
             self.obs.fold_results(drained)
         return out + drained
@@ -1271,10 +1320,16 @@ class SessionPool:
         def nbytes(a) -> int:
             return int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
 
-        total = sum(nbytes(l) for l in jax.tree_util.tree_leaves(self.state))
-        total += nbytes(self._frames) + nbytes(self._lengths)
-        if self._out is not None:
-            total += nbytes(self._out)
+        # Shape arithmetic only — but reading the slab references while a
+        # concurrent dispatch donates-and-rebinds them can hand this loop
+        # a deleted buffer whose ``.shape`` access throws (the PR 6 race,
+        # audited here for the admin endpoint's ``stats()`` path).
+        with self._state_lock:
+            total = sum(nbytes(l)
+                        for l in jax.tree_util.tree_leaves(self.state))
+            total += nbytes(self._frames) + nbytes(self._lengths)
+            if self._out is not None:
+                total += nbytes(self._out)
         total += self.engine.weight_bytes()
         per_slot = total / self.capacity
         if self.obs is not None:

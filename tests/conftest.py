@@ -1,0 +1,41 @@
+"""Shared fixtures: the opt-in session-wide lock-order recorder.
+
+Setting ``SPARTUS_LOCK_ORDER=1`` (the chaos CI job does) installs a
+:class:`repro.analysis.lockorder.LockOrderRecorder` for the whole pytest
+session, so every lock the serving stack creates through ``make_lock``
+is instrumented.  At session end the acquisition-order graph must be
+acyclic (a cycle is a potential deadlock even if this run never hung)
+and the full report is written to ``SPARTUS_LOCK_ORDER_REPORT``
+(default ``lock_order_report.json``) for the CI artifact upload.
+
+Unset, this fixture is a no-op: ``make_lock`` hands out plain
+``threading.Lock`` objects and the serving stack pays nothing.
+"""
+import json
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def lock_order_recorder():
+    if not os.environ.get("SPARTUS_LOCK_ORDER"):
+        yield None
+        return
+    from repro.analysis import lockorder
+
+    rec = lockorder.LockOrderRecorder()
+    prev = lockorder.current()
+    lockorder.install(rec)
+    try:
+        yield rec
+    finally:
+        if prev is not None:
+            lockorder.install(prev)
+        else:
+            lockorder.uninstall()
+        path = os.environ.get("SPARTUS_LOCK_ORDER_REPORT",
+                              "lock_order_report.json")
+        with open(path, "w") as f:
+            json.dump(rec.report(), f, indent=2)
+        rec.assert_acyclic()

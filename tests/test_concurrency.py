@@ -1,0 +1,541 @@
+"""Concurrency analyzer tests: the static guarded-by/lockset pass and
+await-under-lock rule (repro.analysis.concurrency), the runtime
+lock-order recorder (repro.analysis.lockorder), and the live-pool
+concurrency stress — concurrent admin scrapers, a checkpoint thread and
+offloaded ticks against one chunked pool.
+
+Acceptance mutations (ISSUE 10): stripping the lock from
+``SessionPool.measured_sparsity`` must trip the static checker on the
+real scheduler source, and an injected out-of-order acquisition must
+show up as a cycle in the recorder's acquisition graph.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import pytest
+
+from repro.analysis import concurrency, lockorder
+from repro.models import lstm_am
+from repro.serving import (
+    BatchedSpartusEngine,
+    EngineConfig,
+    PoolObservability,
+    StreamRequest,
+    Tracer,
+)
+from repro.serving.scheduler import SessionPool
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SCHEDULER = REPO_ROOT / "src" / "repro" / "serving" / "scheduler.py"
+
+INPUT_DIM, HIDDEN, CLASSES = 20, 32, 11
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = lstm_am.LSTMAMConfig(input_dim=INPUT_DIM, hidden_dim=HIDDEN,
+                               n_layers=2, n_classes=CLASSES)
+    params = lstm_am.cbtd_prune_stacks(
+        lstm_am.init_params(jax.random.key(0), cfg), gamma=0.75, m=4)
+    ecfg = EngineConfig(theta=0.05, gamma=0.75, m=4, capacity_frac=1.0)
+    return BatchedSpartusEngine(params, cfg, ecfg)
+
+
+def _check(src: str, path: str = "src/repro/serving/fake.py"):
+    return concurrency.check_source(textwrap.dedent(src), path)
+
+
+@pytest.fixture()
+def recorder():
+    """A fresh recorder installed for one test; the previous (possibly
+    session-wide, see conftest) recorder is restored afterwards."""
+    rec = lockorder.LockOrderRecorder()
+    prev = lockorder.current()
+    lockorder.install(rec)
+    yield rec
+    if prev is not None:
+        lockorder.install(prev)
+    else:
+        lockorder.uninstall()
+
+
+# ------------------------------------------------ guarded-by: rule basics
+
+
+def test_unguarded_read_and_write_flagged():
+    findings = _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk", "_out": "_lk"}
+            def __init__(self):
+                self.state = 0
+            def read(self):
+                return self.state
+            def write(self):
+                self._out = 1
+    """)
+    assert [f.rule for f in findings] == ["guarded-by", "guarded-by"]
+    assert "read of `self.state`" in findings[0].message
+    assert "write to `self._out`" in findings[1].message
+
+
+def test_guarded_twin_is_clean():
+    assert _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk", "_out": "_lk"}
+            def read(self):
+                with self._lk:
+                    return self.state
+            def write(self):
+                with self._lk:
+                    self._out = 1
+    """) == []
+
+
+def test_multi_item_with_counts():
+    """``with self._tracer.span(...), self._lk:`` — the scheduler's
+    dispatch shape — must register the lock."""
+    assert _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def step(self):
+                with self.tracer.span("dispatch"), self._lk:
+                    self.state = self.f(self.state)
+    """) == []
+
+
+def test_init_is_exempt():
+    assert _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def __init__(self):
+                self.state = 0
+    """) == []
+
+
+def test_unrelated_lock_does_not_count():
+    findings = _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def read(self):
+                with self._other:
+                    return self.state
+    """)
+    assert [f.rule for f in findings] == ["guarded-by"]
+
+
+def test_undeclared_class_is_ignored():
+    assert _check("""
+        class P:
+            def read(self):
+                return self.state
+    """) == []
+
+
+def test_malformed_guard_table_flagged():
+    findings = _check("""
+        class P:
+            _guarded_by_ = {"state": LOCK}
+            def read(self):
+                return self.state
+    """)
+    assert len(findings) == 1
+    assert "literal" in findings[0].message
+
+
+# ------------------------------------- guarded-by: one-hop call resolution
+
+
+def test_helper_with_all_callsites_locked_is_clean():
+    assert _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def _helper(self):
+                return self.state
+            def caller(self):
+                with self._lk:
+                    return self._helper()
+            def caller2(self):
+                with self._lk:
+                    if self.flag:
+                        return self._helper()
+    """) == []
+
+
+def test_helper_with_one_unlocked_callsite_flagged():
+    findings = _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def _helper(self):
+                return self.state
+            def caller(self):
+                with self._lk:
+                    return self._helper()
+            def rogue(self):
+                return self._helper()
+    """)
+    assert [f.rule for f in findings] == ["guarded-by"]
+    assert "_helper" in findings[0].message
+
+
+def test_resolution_is_one_hop_not_transitive():
+    """A two-hop chain (locked caller -> mid -> helper) is NOT resolved:
+    shallow on purpose, like the wallclock-in-jit rule."""
+    findings = _check("""
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def _helper(self):
+                return self.state
+            def _mid(self):
+                return self._helper()
+            def caller(self):
+                with self._lk:
+                    return self._mid()
+    """)
+    assert [f.rule for f in findings] == ["guarded-by"]
+
+
+# ------------------------------------------------ guarded-by: pragma escape
+
+
+def test_pragma_suppresses_named_rule_only():
+    src = """
+        class P:
+            _guarded_by_ = {"state": "_lk"}
+            def audited(self):
+                return self.state  # lint: allow(guarded-by) tick-thread-only
+            def rogue(self):
+                return self.state  # lint: allow(eager-scatter)
+    """
+    findings = _check(src)
+    assert len(findings) == 1
+    assert "rogue" in findings[0].message
+
+
+# --------------------------------------------------------- await-under-lock
+
+
+def test_await_under_lock_flagged_and_twin_clean():
+    bad = _check("""
+        class S:
+            async def pump(self):
+                with self._state_lock:
+                    await self.q.get()
+    """, path="src/repro/serving/async_server.py")
+    assert [f.rule for f in bad] == ["await-under-lock"]
+    good = _check("""
+        class S:
+            async def pump(self):
+                with self._state_lock:
+                    q = self.q
+                await q.get()
+    """, path="src/repro/serving/async_server.py")
+    assert good == []
+
+
+def test_await_under_lock_scoped_to_serving():
+    src = """
+        class S:
+            async def pump(self):
+                with self._lock:
+                    await self.q.get()
+    """
+    assert _check(src, path="src/repro/training/x.py") == []
+    assert len(_check(src, path="src/repro/serving/x.py")) == 1
+
+
+# ------------------------------------------- repo-clean + acceptance (static)
+
+
+def test_repo_is_concurrency_clean():
+    findings = concurrency.check_repo(REPO_ROOT)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_acceptance_mutation_lock_stripped_measured_sparsity():
+    """ISSUE 10 acceptance: strip the lock from the REAL scheduler's
+    ``measured_sparsity`` (the PR 6 race site) and the checker must fire
+    on the now-unguarded ``self.state`` read."""
+    src = SCHEDULER.read_text()
+    guarded = ("        with self._state_lock:\n"
+               "            return self.engine.measured_sparsity(self.state)")
+    assert guarded in src, "measured_sparsity lock site moved; update test"
+    mutated = src.replace(guarded, guarded.replace(
+        "with self._state_lock:", "if True:"))
+    rel = str(SCHEDULER.relative_to(REPO_ROOT))
+    assert concurrency.check_source(src, rel) == []
+    findings = concurrency.check_source(mutated, rel)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "guarded-by"
+    assert "measured_sparsity" in f.message and "self.state" in f.message
+
+
+def test_lint_cli_concurrency_smoke(tmp_path):
+    report = tmp_path / "report.json"
+    env = {**os.environ, "PYTHONPATH": str(REPO_ROOT / "src"),
+           "JAX_PLATFORMS": "cpu", "SPARTUS_LINT_NO_FORCE_DEVICES": "1"}
+    out = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--concurrency",
+         "--report", str(report)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "concurrency lint: clean" in out.stdout
+    assert json.loads(report.read_text())["concurrency"] == []
+
+
+# ------------------------------------------------- lock-order recorder
+
+
+def test_make_lock_plain_without_recorder():
+    prev = lockorder.current()
+    lockorder.uninstall()
+    try:
+        lk = lockorder.make_lock("x")
+        assert not isinstance(lk, lockorder.InstrumentedLock)
+        with lk:
+            pass
+    finally:
+        if prev is not None:
+            lockorder.install(prev)
+
+
+def test_make_lock_instrumented_with_recorder(recorder):
+    lk = lockorder.make_lock("x")
+    assert isinstance(lk, lockorder.InstrumentedLock)
+    with lk:
+        assert lk.locked()
+    assert recorder.hold_times()["x"]["count"] == 1
+
+
+def test_acceptance_mutation_out_of_order_acquisition(recorder):
+    """ISSUE 10 acceptance: two threads taking two locks in opposite
+    orders — never deadlocking in THIS run — must still surface as a
+    cycle in the acquisition-order graph."""
+    a = lockorder.InstrumentedLock("lock_a", recorder)
+    b = lockorder.InstrumentedLock("lock_b", recorder)
+
+    def ab():
+        with a:
+            with b:
+                pass
+
+    def ba():
+        with b:
+            with a:
+                pass
+
+    for fn in (ab, ba):           # sequential: records order, cannot hang
+        t = threading.Thread(target=fn)
+        t.start()
+        t.join()
+    cycles = recorder.cycles()
+    assert cycles and any(set(c) >= {"lock_a", "lock_b"} for c in cycles)
+    with pytest.raises(AssertionError, match="lock-order cycles"):
+        recorder.assert_acyclic()
+
+
+def test_consistent_order_twin_is_acyclic(recorder):
+    a = lockorder.InstrumentedLock("lock_a", recorder)
+    b = lockorder.InstrumentedLock("lock_b", recorder)
+
+    def ab():
+        with a:
+            with b:
+                pass
+
+    threads = [threading.Thread(target=ab) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert recorder.cycles() == []
+    recorder.assert_acyclic()
+    assert recorder.edges()[("lock_a", "lock_b")] == 4
+
+
+def test_hold_times_and_slow_holds():
+    rec = lockorder.LockOrderRecorder(slow_hold_s=0.02)
+    lk = lockorder.InstrumentedLock("slow", rec)
+    with lk:
+        time.sleep(0.05)
+    with lk:
+        pass
+    h = rec.hold_times()["slow"]
+    assert h["count"] == 2 and h["max_s"] >= 0.05
+    assert [s[0] for s in rec.slow_holds()] == ["slow"]
+
+
+def test_reacquire_of_held_lock_is_a_violation(recorder):
+    lk = lockorder.InstrumentedLock("re", recorder)
+    assert lk.acquire()
+    assert not lk.acquire(blocking=False)   # would self-deadlock if blocking
+    lk.release()
+    assert any("re-acquire" in v for v in recorder.violations())
+    with pytest.raises(AssertionError, match="violations"):
+        recorder.assert_acyclic()
+
+
+def test_report_is_json_ready(recorder):
+    with lockorder.InstrumentedLock("x", recorder):
+        pass
+    doc = json.loads(json.dumps(recorder.report()))
+    assert set(doc) == {"edges", "cycles", "violations", "hold_times",
+                        "slow_holds"}
+
+
+# ---------------------------------------- live-pool races + stress (satellites)
+
+
+def _rand_feats(rng, lo=3, hi=24):
+    return rng.standard_normal(
+        (int(rng.integers(lo, hi)), INPUT_DIM)).astype(np.float32)
+
+
+def test_pool_state_readers_survive_donating_ticks(engine):
+    """Regression mirroring the PR 6 ``measured_sparsity`` race, for the
+    readers this PR audited: ``bytes_per_slot`` / ``peek_rows`` /
+    ``shard_loads`` hammered from another thread while chunked ticks
+    donate-and-rebind the device buffers.  Unlocked, the readers can
+    fetch a deleted buffer (RuntimeError from jax)."""
+    pool = SessionPool(engine, capacity=3, max_frames=32, chunk_frames=4)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                pool.bytes_per_slot()
+                pool.measured_sparsity()
+                pool.shard_loads()
+                for rid in list(pool._by_req)[:1]:
+                    try:
+                        pool.peek_rows(rid)
+                    except KeyError:
+                        pass          # retired between listing and peeking
+        except Exception as e:        # the deleted-buffer fetch lands here
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(7)
+    now, rid = 0, 0
+    deadline = time.perf_counter() + 2.0
+    try:
+        while time.perf_counter() < deadline and not errors:
+            while pool.n_free:
+                pool.admit(StreamRequest(rid, now, _rand_feats(rng)), now)
+                rid += 1
+            _, adv = pool.tick(now)
+            now += max(adv, 1)
+        pool.drain(now)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors, errors[0]
+    assert rid > 3                    # the pool actually cycled sessions
+
+
+def test_stress_scrapers_checkpointer_offloaded_ticks(engine):
+    """ISSUE 10 satellite: hammer one live chunked pool with concurrent
+    admin scrapers (stats/metrics/timeseries), a periodic checkpoint
+    thread and offloaded ticks; assert no deleted-buffer fetches, no
+    torn metrics, and an acyclic lock-order graph."""
+    rec = lockorder.LockOrderRecorder(slow_hold_s=30.0)
+    prev = lockorder.current()
+    lockorder.install(rec)          # stays installed for the whole run
+    obs = PoolObservability(tracer=Tracer(enabled=True))
+    pool = SessionPool(engine, capacity=4, max_frames=32, chunk_frames=4,
+                       stream_partials=True, observability=obs)
+    assert isinstance(pool._state_lock, lockorder.InstrumentedLock)
+
+    stop = threading.Event()
+    errors = []
+    n_results = [0]
+
+    def forever(body):
+        def run():
+            try:
+                while not stop.is_set():
+                    body()
+            except Exception as e:
+                errors.append(e)
+                stop.set()
+        return run
+
+    def scrape_pool():
+        pool.measured_sparsity()
+        pool.bytes_per_slot()
+        _ = pool.has_pending
+
+    def scrape_metrics():
+        snap = obs.registry.snapshot()
+        for key, m in snap.items():
+            if m["type"] == "histogram":
+                cum = list(m["buckets"].values())
+                assert cum == sorted(cum), f"torn buckets: {key}"
+                assert m["count"] >= (cum[-1] if cum else 0), \
+                    f"torn count: {key}"
+        obs.registry.render_prometheus()
+        obs.timeseries.snapshot(last=64)
+        _ = obs.timeseries.n_dropped
+        _ = obs.tracer.n_events
+
+    def checkpointer():
+        pool.snapshot()               # one gathered D2H fetch, under lock
+        time.sleep(0.03)
+
+    def driver():
+        rng = np.random.default_rng(11)
+        now, rid = 0, 0
+        deadline = time.perf_counter() + 3.0
+        while time.perf_counter() < deadline and not stop.is_set():
+            while pool.n_free:
+                pool.admit(StreamRequest(rid, now, _rand_feats(rng)), now)
+                rid += 1
+            res, adv = pool.tick(now)
+            n_results[0] += len(res)
+            pool.take_partials()
+            now += max(adv, 1)
+        n_results[0] += len(pool.drain(now))
+        stop.set()
+
+    def driver_once():
+        try:
+            driver()
+        except Exception as e:
+            errors.append(e)
+        finally:
+            stop.set()
+
+    threads = [threading.Thread(target=forever(f))
+               for f in (scrape_pool, scrape_metrics, checkpointer)]
+    threads.append(threading.Thread(target=driver_once))
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        hung = [t for t in threads if t.is_alive()]
+        stop.set()
+    finally:
+        if prev is not None:
+            lockorder.install(prev)
+        else:
+            lockorder.uninstall()
+    assert not hung, "stress threads hung (potential deadlock)"
+    assert not errors, errors[0]
+    assert n_results[0] > 0
+    rec.assert_acyclic()
+    holds = rec.hold_times()
+    assert holds.get("SessionPool._state_lock", {}).get("count", 0) > 0
+    assert holds.get("MetricsRegistry._lock", {}).get("count", 0) > 0

@@ -1,14 +1,16 @@
-"""Repo lint driver: AST rules + hot-path contract checking.
+"""Repo lint driver: AST rules + hot-path contracts + concurrency rules.
 
 Usage (from the repo root)::
 
-    python -m tools.lint --ast --contracts [--report out.json]
+    python -m tools.lint --ast --contracts --concurrency [--report out.json]
 
 ``--ast`` runs the repo-specific AST rules (repro.analysis.lint) over
 every ``.py`` file under ``src/`` and ``tools/``.  ``--contracts``
 lowers and compiles every registered hot-path contract case
-(repro.analysis.cases) and checks the optimized HLO.  With neither flag,
-both layers run.  Exit status is non-zero on any violation; ``--report``
+(repro.analysis.cases) and checks the optimized HLO.  ``--concurrency``
+runs the static guarded-by/lockset pass and the await-under-lock rule
+(repro.analysis.concurrency) over the same file set.  With no flag,
+all layers run.  Exit status is non-zero on any violation; ``--report``
 writes a JSON artifact with every finding and per-case op histograms
 (the CI lint job uploads it).
 
@@ -52,6 +54,12 @@ def _run_contracts() -> list:
     return contracts.check_cases(cases.build_cases())
 
 
+def _run_concurrency() -> list:
+    from repro.analysis import concurrency
+
+    return concurrency.check_repo(REPO_ROOT)
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="tools.lint", description=__doc__,
@@ -60,11 +68,15 @@ def main(argv=None) -> int:
                         help="run the repo-specific AST rules")
     parser.add_argument("--contracts", action="store_true",
                         help="compile and check the hot-path contracts")
+    parser.add_argument("--concurrency", action="store_true",
+                        help="run the guarded-by/await-under-lock rules")
     parser.add_argument("--report", type=Path, default=None,
                         help="write a JSON report artifact")
     args = parser.parse_args(argv)
-    run_ast = args.ast or not (args.ast or args.contracts)
-    run_contracts = args.contracts or not (args.ast or args.contracts)
+    any_flag = args.ast or args.contracts or args.concurrency
+    run_ast = args.ast or not any_flag
+    run_contracts = args.contracts or not any_flag
+    run_concurrency = args.concurrency or not any_flag
 
     failed = False
     report: dict = {}
@@ -79,6 +91,17 @@ def main(argv=None) -> int:
                 print(f"  {f}")
         else:
             print("AST lint: clean")
+
+    if run_concurrency:
+        findings = _run_concurrency()
+        report["concurrency"] = [vars(f) for f in findings]
+        if findings:
+            failed = True
+            print(f"concurrency lint: {len(findings)} finding(s)")
+            for f in findings:
+                print(f"  {f}")
+        else:
+            print("concurrency lint: clean")
 
     if run_contracts:
         reports = _run_contracts()
